@@ -1,0 +1,123 @@
+"""Shared benchmark fixtures: datasets, workloads, reporting.
+
+The paper evaluates on a ~10M-vertex MusicBrainz subset and a ~1M-vertex
+ProvGen graph with k=8 partitions (§6.1).  We scale the graphs down to run
+on one CPU container (size configurable via REPRO_BENCH_N); everything else
+follows the paper: the same query patterns (MQ1-3, PQ1-4), k=8, 5% balance,
+ipt as the quality metric.
+"""
+from __future__ import annotations
+
+import csv
+import io
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.rpq import RPQ, parse_rpq
+from repro.core.taper import Taper, TaperConfig
+from repro.graphs.generators import musicbrainz_like, provgen_like
+from repro.graphs.graph import LabelledGraph
+from repro.graphs.partition import hash_partition, metis_like_partition
+from repro.workload.executor import QueryExecutor
+
+BENCH_N = int(os.environ.get("REPRO_BENCH_N", "20000"))
+K = 8  # paper §6.1: "a reasonable number of partitions (8)"
+
+
+# -- query workloads (paper §6.1.2) ------------------------------------------
+
+MQ = {
+    "MQ1": parse_rpq("Area.Artist.(Artist|Label).Area"),
+    "MQ2": parse_rpq("Artist.Credit.(Track|Recording).Credit.Artist"),
+    "MQ3": parse_rpq("Artist.Credit.Track.Medium"),
+}
+
+PQ = {
+    "PQ1": parse_rpq("Entity.(Entity)*.Entity"),
+    "PQ2": parse_rpq("Agent.Activity.Entity.Entity.Activity.Agent"),
+    "PQ3": parse_rpq("(Entity)*.Activity.Entity"),
+    "PQ4": parse_rpq("Entity.Activity.(Agent)*"),
+}
+
+
+def musicbrainz_workload(freqs=(0.2, 0.3, 0.5)) -> List[Tuple[RPQ, float]]:
+    return list(zip(MQ.values(), freqs))
+
+
+def provgen_workload(freqs=(0.4, 0.2, 0.2, 0.2)) -> List[Tuple[RPQ, float]]:
+    return list(zip(PQ.values(), freqs))
+
+
+# -- datasets ------------------------------------------------------------------
+
+
+_GRAPH_CACHE: Dict[Tuple, LabelledGraph] = {}
+
+
+def dataset(name: str, n: Optional[int] = None) -> LabelledGraph:
+    n = n or BENCH_N
+    key = (name, n)
+    if key not in _GRAPH_CACHE:
+        if name == "musicbrainz":
+            _GRAPH_CACHE[key] = musicbrainz_like(n, avg_degree=6.0, seed=13)
+        elif name == "provgen":
+            _GRAPH_CACHE[key] = provgen_like(n, avg_degree=6.0, seed=11)
+        else:
+            raise ValueError(name)
+    return _GRAPH_CACHE[key]
+
+
+def workload_for(name: str) -> List[Tuple[RPQ, float]]:
+    return musicbrainz_workload() if name == "musicbrainz" else provgen_workload()
+
+
+# -- result reporting -----------------------------------------------------------
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+
+class Report:
+    """Collects ``name,us_per_call,derived`` rows (benchmarks/run.py contract)."""
+
+    def __init__(self):
+        self.rows: List[Row] = []
+
+    def add(self, name: str, seconds: float, derived: str) -> None:
+        self.rows.append(Row(name, seconds * 1e6, derived))
+
+    def timeit(self, name: str, fn: Callable, derived_fn: Callable[[object], str]):
+        t0 = time.perf_counter()
+        out = fn()
+        dt = time.perf_counter() - t0
+        self.add(name, dt, derived_fn(out))
+        return out
+
+    def emit(self, fh=None) -> str:
+        buf = io.StringIO()
+        w = csv.writer(buf)
+        w.writerow(["name", "us_per_call", "derived"])
+        for r in self.rows:
+            w.writerow([r.name, f"{r.us_per_call:.1f}", r.derived])
+        text = buf.getvalue()
+        print(text if fh is None else text, file=fh, end="")
+        return text
+
+
+def taper_for(g: LabelledGraph, **overrides) -> Taper:
+    kwargs = {"max_iterations": 8, "seed": 0}
+    kwargs.update(overrides)
+    return Taper(g, K, TaperConfig(**kwargs))
+
+
+def baselines(g: LabelledGraph):
+    """(hash, metis-like) starting partitionings (paper §6.1)."""
+    return hash_partition(g.n, K, seed=1), metis_like_partition(g, K, seed=0)

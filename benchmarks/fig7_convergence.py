@@ -1,0 +1,73 @@
+"""Fig. 7 — ipt per TAPER internal iteration, from a hash partitioning.
+
+Paper claims (§6.2.1): quality converges to within ~10% of a Metis
+partitioning in < 8 internal iterations, with ~80% ipt reduction on ProvGen;
+and the total number of vertex swaps is at least 2x smaller than the cost of
+rearranging the hash partitioning into the Metis one (swap-cost comparison).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from benchmarks.common import Report, baselines, dataset, taper_for, workload_for
+from repro.workload.executor import QueryExecutor
+
+
+def run(report: Optional[Report] = None, datasets=("provgen", "musicbrainz")) -> Report:
+    report = report or Report()
+    for name in datasets:
+        g = dataset(name)
+        w = workload_for(name)
+        ex = QueryExecutor(g)
+        hash_p, metis_p = baselines(g)
+        ipt_hash = ex.workload_ipt(w, hash_p)     # top dotted line
+        ipt_metis = ex.workload_ipt(w, metis_p)   # bottom dotted line
+
+        taper = taper_for(g)
+        t0 = time.perf_counter()
+        rep = taper.invoke(hash_p, w)
+        dt = time.perf_counter() - t0
+
+        # ipt per internal iteration (the plotted series)
+        series = [ex.workload_ipt(w, p) for p in rep.parts]
+        for i, v in enumerate(series):
+            report.add(
+                f"fig7/{name}/iter{i}", dt / max(rep.iterations, 1),
+                f"ipt={v:.0f} frac_of_hash={v / ipt_hash:.3f}",
+            )
+        final = series[-1]
+        reduction = 1 - final / ipt_hash
+        vs_metis = final / max(ipt_metis, 1e-9)
+        report.add(
+            f"fig7/{name}/summary", dt,
+            f"iters={rep.iterations} reduction={reduction:.1%} "
+            f"ipt_hash={ipt_hash:.0f} ipt_metis={ipt_metis:.0f} vs_metis={vs_metis:.2f}",
+        )
+
+        # §6.2.1 swap-cost comparison: swaps TAPER needs to reach Metis-level
+        # quality vs the cost of rearranging the hash partitioning into the
+        # Metis one ("a Metis repartitioning has a cost at least 2X that of a
+        # TAPER invocation").
+        swaps_to_metis_quality = rep.total_moves
+        cum = 0
+        for i, moves in enumerate(rep.moves):
+            cum += moves
+            if series[i + 1] <= ipt_metis:
+                swaps_to_metis_quality = cum
+                break
+        metis_rearrange = int((hash_p != metis_p).sum())
+        report.add(
+            f"fig7/{name}/swap_cost", dt,
+            f"taper_swaps_total={rep.total_moves} "
+            f"taper_swaps_to_metis_quality={swaps_to_metis_quality} "
+            f"metis_rearrange_swaps={metis_rearrange} "
+            f"ratio={metis_rearrange / max(swaps_to_metis_quality, 1):.2f}x",
+        )
+    return report
+
+
+if __name__ == "__main__":
+    run().emit()

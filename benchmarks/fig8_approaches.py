@@ -1,0 +1,47 @@
+"""Fig. 8 — ipt per partitioning approach.
+
+Approaches: Hash, Hash+TAPER, Metis(-like), Metis+TAPER (paper), plus
+Fennel and Fennel+TAPER (extra streaming baseline).  Paper claim: TAPER
+achieves ~30% average ipt reduction over a Metis starting point (§6.2.2).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from benchmarks.common import Report, baselines, dataset, taper_for, workload_for
+from repro.graphs.partition import fennel_stream_partition
+from repro.workload.executor import QueryExecutor
+
+
+def run(report: Optional[Report] = None, datasets=("provgen", "musicbrainz")) -> Report:
+    report = report or Report()
+    for name in datasets:
+        g = dataset(name)
+        w = workload_for(name)
+        ex = QueryExecutor(g)
+        hash_p, metis_p = baselines(g)
+        fennel_p = fennel_stream_partition(g, 8, seed=0)
+
+        starts = {"hash": hash_p, "metis": metis_p, "fennel": fennel_p}
+        ipts = {}
+        for sname, part in starts.items():
+            ipts[sname] = ex.workload_ipt(w, part)
+            report.add(f"fig8/{name}/{sname}", 0.0, f"ipt={ipts[sname]:.0f}")
+
+        taper = taper_for(g)
+        for sname, part in starts.items():
+            t0 = time.perf_counter()
+            rep = taper.invoke(part, w)
+            dt = time.perf_counter() - t0
+            ipt = ex.workload_ipt(w, rep.final_part)
+            report.add(
+                f"fig8/{name}/{sname}+taper", dt,
+                f"ipt={ipt:.0f} reduction={1 - ipt / max(ipts[sname], 1e-9):.1%} "
+                f"iters={rep.iterations} moves={rep.total_moves}",
+            )
+    return report
+
+
+if __name__ == "__main__":
+    run().emit()

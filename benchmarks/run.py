@@ -1,0 +1,57 @@
+"""Benchmark runner: one module per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV (plus roofline/dry-run summaries if
+artifacts exist).  Scale via REPRO_BENCH_N (default 20000 vertices).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks.common import Report
+
+
+def main() -> None:
+    from benchmarks import (
+        fig7_convergence,
+        fig8_approaches,
+        fig9_queries,
+        fig10_drift,
+        fig11_online,
+    )
+
+    modules = [
+        ("fig7_convergence", fig7_convergence),
+        ("fig8_approaches", fig8_approaches),
+        ("fig9_queries", fig9_queries),
+        ("fig10_drift", fig10_drift),
+        ("fig11_online", fig11_online),
+    ]
+    # integration benchmarks (registered lazily; require the model substrate)
+    try:
+        from benchmarks import gnn_halo, dlrm_span, expert_placement
+
+        modules += [
+            ("gnn_halo", gnn_halo),
+            ("dlrm_span", dlrm_span),
+            ("expert_placement", expert_placement),
+        ]
+    except ImportError:
+        pass
+
+    report = Report()
+    failures = 0
+    for name, mod in modules:
+        try:
+            mod.run(report)
+        except Exception:
+            failures += 1
+            print(f"BENCHMARK {name} FAILED:", file=sys.stderr)
+            traceback.print_exc()
+    report.emit()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+from repro.configs.base import (
+    ArchConfig,
+    DLRMConfig,
+    GNNConfig,
+    LMConfig,
+    MoEConfig,
+    ShapeSpec,
+    TaperSystemConfig,
+)
+from repro.configs.registry import get_config, list_archs, shapes_for
+
+__all__ = [
+    "ArchConfig",
+    "DLRMConfig",
+    "GNNConfig",
+    "LMConfig",
+    "MoEConfig",
+    "ShapeSpec",
+    "TaperSystemConfig",
+    "get_config",
+    "list_archs",
+    "shapes_for",
+]

@@ -1,0 +1,15 @@
+"""taper_paper — the paper's own technique as a distributed workload:
+one extroversion-field refine step over a MusicBrainz-scale graph
+(10M vertices, 12 labels) partitioned over the mesh.
+"""
+from repro.configs.base import TaperSystemConfig
+
+CONFIG = TaperSystemConfig(
+    name="taper_paper",
+    n_vertices=10_000_000,
+    avg_degree=6.0,
+    n_labels=12,
+    n_trie_nodes=24,
+    trie_depth=4,
+    k_partitions=512,
+)

@@ -1,0 +1,27 @@
+"""TAPER core: the paper's primary contribution.
+
+RPQ workload encoding (rpq), the TPSTry summary trie (tpstry), the
+vectorised Visitor-Matrix extroversion field (visitor), vertex swapping
+(swap) and the invocation driver (taper).
+"""
+from repro.core.rpq import RPQ, parse_rpq, label, concat, union, star
+from repro.core.tpstry import TPSTry, TrieArrays
+from repro.core.visitor import ExtroversionResult, extroversion_field, vm_cell
+from repro.core.taper import Taper, TaperConfig, TaperReport
+
+__all__ = [
+    "RPQ",
+    "parse_rpq",
+    "label",
+    "concat",
+    "union",
+    "star",
+    "TPSTry",
+    "TrieArrays",
+    "ExtroversionResult",
+    "extroversion_field",
+    "vm_cell",
+    "Taper",
+    "TaperConfig",
+    "TaperReport",
+]

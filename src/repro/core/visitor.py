@@ -1,0 +1,281 @@
+"""Vectorised Visitor-Matrix extroversion field (paper §2.3, §3.2, §5.4).
+
+The paper's Alg. 1 builds Visitor-Matrix rows corecursively per vertex.  We
+reformulate it as a depth-stratified sparse recurrence over the edge list —
+the TPU-native adaptation (DESIGN.md §2):
+
+  state    alpha[v, n]  = total probability of workload-legal *intra-partition*
+                          paths ending at v whose label string is trie node n
+  base     alpha[v, n1] = p(n1) / |{u : l(u) = label(n1)}|        (depth-1 n1)
+  step     alpha[w, n'] += alpha[u, parent(n')] * cond_p(n')
+                           / cnt[u, l(w)]          over local edges (u, w)
+  masses   mass[u→w]    = sum_n alpha[u, parent(c)] * cond_p(c) / cnt[u, l(w)]
+                          for c = child(n, l(w))   over ALL edges
+  outputs  Pr(v)        = sum_{n non-leaf} alpha[v, n]
+           extroversion = (sum of mass over cut edges out of v) / Pr(v)
+           introversion = 1 - extroversion  (termination mass is intra, §4.2)
+
+Everything is `segment_sum` over edge blocks — the same kernel regime as GNN
+message passing; `repro.kernels.vm_step` provides the Pallas TPU kernel for
+the inner step, and this module is its jnp oracle.
+
+One jit cache entry exists per (trie topology, graph/partition shapes); trie
+*probabilities* are runtime arguments so workload-frequency drift never
+recompiles.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tpstry import TrieArrays
+from repro.graphs.graph import LabelledGraph
+from repro.utils import get_logger
+
+log = get_logger("core.visitor")
+
+_EPS = 1e-30
+
+
+@dataclass
+class ExtroversionResult:
+    """Per-vertex/per-edge extroversion field for one partitioning."""
+
+    alpha: np.ndarray         # (n, N) path-state probabilities
+    pr: np.ndarray            # (n,)  total traversal probability through v
+    edge_mass: np.ndarray     # (m,)  traversal probability mass per directed edge
+    extro_mass: np.ndarray    # (n,)  external mass out of v
+    extroversion: np.ndarray  # (n,)  extro_mass / pr  (0 where pr == 0)
+    ext_to: Optional[np.ndarray]  # (n, k) external mass per destination part
+                                  # (None under the two-phase §Perf-T2 path:
+                                  # swap computes candidate rows lazily)
+    total_extroversion: float  # sum of extro_mass — TAPER's objective
+
+    @property
+    def introversion(self) -> np.ndarray:
+        return np.where(self.pr > 0, 1.0 - self.extroversion, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# jit core (cached per trie topology + shapes)
+# ---------------------------------------------------------------------------
+
+_FIELD_CACHE: Dict[Tuple, object] = {}
+
+
+def _build_field_fn(topology: Tuple, trie: TrieArrays, k: int, depth_cap: int,
+                    fused: bool = True, dense_ext_to: bool = True):
+    """Build the jitted field function for a fixed trie *topology*.
+
+    Topology (parent/label/leaf structure) is baked in as Python-level loop
+    structure; probabilities arrive as runtime arrays.
+
+    Two implementations (numerically identical; tested against each other):
+
+    * naive  — one gather + segment_sum pass over the edge list per trie
+      node (the direct transcription of the recurrence);
+    * fused  — all trie nodes of one depth advance in a single batched
+      gather / elementwise / segment_sum pass (§Perf iteration T1: the
+      naive variant launches ~N_trie scatter passes whose intermediates
+      cannot fuse, and its HBM term is ~5x the fused one).
+    """
+    parent = trie.parent.copy()
+    labels_n = trie.label.copy()
+    depth = trie.depth.copy()
+    is_leaf = trie.is_leaf.copy()
+    N = trie.n_nodes
+    max_depth = min(trie.max_depth, depth_cap)
+
+    step_nodes = [
+        i for i in range(N) if 2 <= depth[i] <= max_depth
+    ]  # in depth order already (compile() sorts by depth)
+    # states that still have outgoing transitions (non-leaf, depth in [1, t))
+    counted_nodes = [
+        i for i in range(N)
+        if 1 <= depth[i] < max_depth and not is_leaf[i]
+    ]
+
+    def _priors(vlabels, lab_vcount, p, n):
+        cols = []
+        for i in range(N):
+            if depth[i] == 1:
+                li = int(labels_n[i])
+                prior = p[i] / jnp.maximum(lab_vcount[li].astype(jnp.float32), 1.0)
+                cols.append(jnp.where(vlabels == li, prior, 0.0))
+            else:
+                cols.append(jnp.zeros((n,), dtype=jnp.float32))
+        return jnp.stack(cols, axis=1) if N else jnp.zeros((n, 0), jnp.float32)
+
+    def _aggregates(alpha, mass, src, dst, part, local, n, m):
+        pr = jnp.zeros((n,), dtype=jnp.float32)
+        for i in counted_nodes:
+            pr = pr + alpha[:, i]
+        is_ext = 1.0 - local
+        extro_mass = jax.ops.segment_sum(mass * is_ext, src, num_segments=n)
+        extroversion = jnp.where(pr > _EPS, extro_mass / jnp.maximum(pr, _EPS), 0.0)
+        if dense_ext_to:
+            seg = src.astype(jnp.int32) * k + part[dst]
+            ext_to = jax.ops.segment_sum(mass * is_ext, seg, num_segments=n * k)
+            return alpha, pr, mass, extro_mass, extroversion, ext_to.reshape(n, k)
+        return alpha, pr, mass, extro_mass, extroversion
+
+    @partial(jax.jit, static_argnames=("n", "m"))
+    def field_fn_naive(
+        src, dst, vlabels, cnt, lab_vcount, part, p, cond_p, *, n: int, m: int
+    ):
+        inv_cnt = 1.0 / jnp.maximum(cnt.astype(jnp.float32), 1.0)  # (n, L)
+        local = (part[src] == part[dst]).astype(jnp.float32)       # (m,)
+        dst_lab = vlabels[dst]                                     # (m,)
+        alpha = _priors(vlabels, lab_vcount, p, n)
+
+        # --- DP steps + edge masses, one pass per depth>=2 node ---
+        mass = jnp.zeros((m,), dtype=jnp.float32)
+        for c in step_nodes:
+            par, lc = int(parent[c]), int(labels_n[c])
+            contrib = (
+                alpha[src, par]
+                * cond_p[c]
+                * inv_cnt[src, lc]
+                * (dst_lab == lc).astype(jnp.float32)
+            )
+            mass = mass + contrib
+            # only local (intra-partition) extensions continue the path
+            alpha = alpha.at[:, c].add(
+                jax.ops.segment_sum(contrib * local, dst, num_segments=n)
+            )
+        return _aggregates(alpha, mass, src, dst, part, local, n, m)
+
+    @partial(jax.jit, static_argnames=("n", "m"))
+    def field_fn_fused(
+        src, dst, vlabels, cnt, lab_vcount, part, p, cond_p, *, n: int, m: int
+    ):
+        inv_cnt = 1.0 / jnp.maximum(cnt.astype(jnp.float32), 1.0)  # (n, L)
+        local = (part[src] == part[dst]).astype(jnp.float32)       # (m,)
+        dst_lab = vlabels[dst]                                     # (m,)
+        alpha = _priors(vlabels, lab_vcount, p, n)
+
+        mass = jnp.zeros((m,), dtype=jnp.float32)
+        for d in range(2, max_depth + 1):
+            nodes_d = [c for c in step_nodes if depth[c] == d]
+            if not nodes_d:
+                continue
+            pars = np.asarray([parent[c] for c in nodes_d])
+            labs = np.asarray([labels_n[c] for c in nodes_d])
+            # one batched gather of the needed parent columns: (m, n_d)
+            # (column-slice first so the row gather moves n_d floats/edge,
+            # not the full trie row)
+            a_par = alpha[:, pars][src]
+            coef = cond_p[jnp.asarray(np.asarray(nodes_d))][None, :]
+            lab_mask = (dst_lab[:, None] == jnp.asarray(labs)[None, :])
+            ic = inv_cnt[:, labs][src]
+            contrib = a_par * coef * ic * lab_mask.astype(jnp.float32)
+            mass = mass + contrib.sum(axis=1)
+            # single segment_sum for the whole depth: (n, n_d)
+            upd = jax.ops.segment_sum(contrib * local[:, None], dst,
+                                      num_segments=n)
+            alpha = alpha.at[:, jnp.asarray(np.asarray(nodes_d))].add(upd)
+        return _aggregates(alpha, mass, src, dst, part, local, n, m)
+
+    return field_fn_fused if fused else field_fn_naive
+
+
+def extroversion_field(
+    g: LabelledGraph,
+    trie: TrieArrays,
+    part: np.ndarray,
+    k: int,
+    depth_cap: Optional[int] = None,
+    _precomputed: Optional[Dict] = None,
+    fused: bool = True,
+    dense_ext_to: bool = True,
+) -> ExtroversionResult:
+    """Compute the extroversion field of ``part`` under the workload trie.
+
+    ``depth_cap`` implements the paper's §5.2.2 time heuristic (stop VM row
+    expansion at path length < t, trading accuracy for time).
+    """
+    depth_cap = depth_cap or trie.max_depth
+    key = (trie.topology_signature(), k, depth_cap, g.n, g.m, fused, dense_ext_to)
+    fn = _FIELD_CACHE.get(key)
+    if fn is None:
+        fn = _build_field_fn(key, trie, k, depth_cap, fused=fused,
+                             dense_ext_to=dense_ext_to)
+        _FIELD_CACHE[key] = fn
+
+    pre = _precomputed or {}
+    cnt = pre.get("cnt")
+    if cnt is None:
+        cnt = g.neighbor_label_counts()
+    lab_vcount = pre.get("lab_vcount")
+    if lab_vcount is None:
+        lab_vcount = g.label_counts()
+
+    out = fn(
+        jnp.asarray(g.src),
+        jnp.asarray(g.dst),
+        jnp.asarray(g.labels),
+        jnp.asarray(cnt),
+        jnp.asarray(lab_vcount),
+        jnp.asarray(part.astype(np.int32)),
+        jnp.asarray(trie.p),
+        jnp.asarray(trie.cond_p),
+        n=g.n,
+        m=g.m,
+    )
+    if dense_ext_to:
+        alpha, pr, mass, extro_mass, extroversion, ext_to = out
+        ext_to = np.asarray(ext_to)
+    else:
+        alpha, pr, mass, extro_mass, extroversion = out
+        ext_to = None
+    return ExtroversionResult(
+        alpha=np.asarray(alpha),
+        pr=np.asarray(pr),
+        edge_mass=np.asarray(mass),
+        extro_mass=np.asarray(extro_mass),
+        extroversion=np.asarray(extroversion),
+        ext_to=ext_to,
+        total_extroversion=float(np.asarray(extro_mass).sum()),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reference single-cell evaluation (paper §4.2) — used by tests/examples
+# ---------------------------------------------------------------------------
+
+
+def vm_cell(
+    g: LabelledGraph, trie: TrieArrays, path_vertices, label_names=None
+) -> np.ndarray:
+    """``VM^(t)[p_1, ..., p_{t-1}, *]``: the distribution over next vertices
+    given the path ``path_vertices`` (paper §4.2 worked example).
+
+    Returns an ``(n,)`` vector of transition probabilities (rows need not sum
+    to 1; the shortfall is the 'no subsequent traversal' mass, §4.2 fn. 6).
+    """
+    path = list(path_vertices)
+    # find trie node for the label string of the path
+    node = 0
+    for v in path:
+        child = trie.child_index[node, g.labels[v]]
+        if child < 0:
+            return np.zeros(g.n, dtype=np.float64)
+        node = int(child)
+    last = path[-1]
+    nbrs = g.neighbors(last)
+    nbr_labels = g.labels[nbrs]
+    out = np.zeros(g.n, dtype=np.float64)
+    for lab_id in range(trie.n_labels):
+        child = trie.child_index[node, lab_id]
+        if child < 0:
+            continue
+        cond = float(trie.cond_p[child])
+        same = nbrs[nbr_labels == lab_id]
+        if same.size:
+            out[same] += cond / same.size
+    return out

@@ -1,0 +1,19 @@
+from repro.distributed.sharding import (
+    LogicalAxisRules,
+    SINGLE_POD_RULES,
+    MULTI_POD_RULES,
+    activation_sharding,
+    constrain,
+    logical_to_sharding,
+    tree_shardings,
+)
+
+__all__ = [
+    "LogicalAxisRules",
+    "SINGLE_POD_RULES",
+    "MULTI_POD_RULES",
+    "activation_sharding",
+    "constrain",
+    "logical_to_sharding",
+    "tree_shardings",
+]

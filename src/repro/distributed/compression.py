@@ -1,0 +1,55 @@
+"""Gradient compression: int8 quantisation with error feedback.
+
+Before the (all-reduced) gradients hit the optimizer, each leaf is
+quantised to int8 with a per-tensor scale; the quantisation error is kept
+as residual state and added back next step (error feedback, Seide et al. /
+1-bit SGD lineage), which preserves convergence.  On a real deployment the
+int8 tensors are what crosses the DP axis — an 4x wire-byte reduction on
+the gradient all-reduce (recorded in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residuals(params) -> Dict:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def _quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, residuals):
+    """Returns (compressed-then-decompressed grads, new residuals).
+
+    The int8 representation is materialised (it is what the DP all-reduce
+    would carry); the error is fed back into the next step's residual.
+    """
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = _quantize(g32)
+        deq = _dequantize(q, scale)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = treedef.unflatten([o[0] for o in out])
+    new_r = treedef.unflatten([o[1] for o in out])
+    return new_g, new_r
+
+
+def wire_bytes_saved(params) -> int:
+    """fp32 -> int8 gradient bytes saved per DP all-reduce."""
+    total = sum(x.size for x in jax.tree.leaves(params))
+    return total * (4 - 1)

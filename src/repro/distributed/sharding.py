@@ -1,0 +1,183 @@
+"""Logical-axis sharding rules (MaxText/t5x style).
+
+Model code annotates every tensor dimension with a *logical* name; the launch
+layer resolves names to mesh axes per deployment.  Parameters use the
+``fsdp`` name on their largest dim (ZeRO-3: parameters and optimizer state
+fully sharded over the data axis) and ``model`` on the tensor-parallel dim.
+
+Defaults:
+
+  single pod  (16, 16)   -> ("data", "model")
+  multi-pod   (2, 16, 16) -> ("pod", "data", "model");
+    batch over (pod, data); parameters replicated across pods (DCN is slow;
+    intra-pod ICI carries the FSDP all-gathers), unless ``fsdp_over_pod``.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints
+#
+# Model code calls ``constrain(x, "batch", None, ...)`` on intermediates.
+# Outside a launch context this is a no-op (CPU tests see plain arrays);
+# the launch layer activates it so GSPMD cannot drift into pathological
+# layouts (the dry-run §Perf log shows why this matters: without constraints
+# XLA materialised full-batch fp32 logits on every device).
+# ---------------------------------------------------------------------------
+
+_ACT_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: Optional["LogicalAxisRules"] = None):
+    token = _ACT_CTX.set((mesh, rules or rules_for(mesh)))
+    try:
+        yield
+    finally:
+        _ACT_CTX.reset(token)
+
+
+def constrain(x, *logical_axes):
+    """with_sharding_constraint by logical names; no-op without context."""
+    ctx = _ACT_CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = rules.spec(logical_axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+@dataclass(frozen=True)
+class LogicalAxisRules:
+    rules: Tuple[Tuple[str, Axis], ...]
+
+    def lookup(self, name: Optional[str]) -> Axis:
+        if name is None:
+            return None
+        for k, v in self.rules:
+            if k == name:
+                return v
+        return None
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None,
+             mesh: Optional[Mesh] = None) -> P:
+        """Resolve logical names to a PartitionSpec.
+
+        When ``shape`` and ``mesh`` are given, mesh axes that do not divide
+        the dimension are dropped (trailing-first), falling back to
+        replication — the standard divisibility guard."""
+        seen = []
+        out = []
+        for i, name in enumerate(logical_axes):
+            ax = self.lookup(name)
+            if ax is None:
+                out.append(None)
+                continue
+            flat = (ax,) if isinstance(ax, str) else tuple(ax)
+            # a mesh axis may appear only once in a PartitionSpec
+            flat = tuple(a for a in flat if a not in seen)
+            if shape is not None and mesh is not None:
+                dim = shape[i]
+                while flat:
+                    prod = 1
+                    for a in flat:
+                        prod *= mesh.shape[a]
+                    if dim % prod == 0:
+                        break
+                    flat = flat[:-1]
+            seen.extend(flat)
+            if not flat:
+                out.append(None)
+            elif len(flat) == 1:
+                out.append(flat[0])
+            else:
+                out.append(flat)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+
+SINGLE_POD_RULES = LogicalAxisRules((
+    ("batch", ("data",)),
+    ("fsdp", ("data",)),
+    ("model", ("model",)),
+    ("experts", ("model",)),
+    ("vocab", ("model",)),
+    ("heads", ("model",)),
+    ("kv_heads", ("model",)),
+    ("ffn", ("model",)),
+    # KV-cache sequence: takes whatever axes the array hasn't used yet
+    # (batched decode -> model only; batch-1 long decode -> data+model)
+    ("kv_seq", ("data", "model")),
+    ("nodes", ("data",)),       # GNN node dim
+    ("edges", ("data",)),
+    ("rows", ("model",)),       # embedding-table rows
+    ("candidates", ("model",)),
+    ("feat_model", ("model",)),
+))
+
+MULTI_POD_RULES = LogicalAxisRules((
+    ("batch", ("pod", "data")),
+    ("fsdp", ("data",)),
+    ("model", ("model",)),
+    ("experts", ("model",)),
+    ("vocab", ("model",)),
+    ("heads", ("model",)),
+    ("kv_heads", ("model",)),
+    ("ffn", ("model",)),
+    ("kv_seq", ("pod", "data", "model")),
+    ("nodes", ("pod", "data")),
+    ("edges", ("pod", "data")),
+    ("rows", ("model",)),
+    ("candidates", ("model",)),
+    ("feat_model", ("model",)),
+))
+
+
+def rules_for(mesh: Mesh) -> LogicalAxisRules:
+    return MULTI_POD_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES
+
+
+def logical_to_sharding(
+    mesh: Mesh,
+    logical_axes: Sequence[Optional[str]],
+    rules: Optional[LogicalAxisRules] = None,
+    shape: Optional[Sequence[int]] = None,
+) -> NamedSharding:
+    rules = rules or rules_for(mesh)
+    return NamedSharding(mesh, rules.spec(logical_axes, shape, mesh))
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+
+def tree_shardings(mesh: Mesh, logical_tree, shapes_tree=None,
+                   rules: Optional[LogicalAxisRules] = None):
+    """Map a pytree of logical-axis tuples to NamedShardings.  With
+    ``shapes_tree`` (matching pytree of ShapeDtypeStructs), applies the
+    divisibility fallback."""
+    rules = rules or rules_for(mesh)
+    if shapes_tree is None:
+        return jax.tree.map(
+            lambda axes: logical_to_sharding(mesh, axes, rules),
+            logical_tree, is_leaf=_is_axes,
+        )
+    flat_axes, treedef = jax.tree.flatten(logical_tree, is_leaf=_is_axes)
+    flat_shapes = jax.tree.leaves(shapes_tree)
+    out = [
+        logical_to_sharding(mesh, axes, rules, s.shape)
+        for axes, s in zip(flat_axes, flat_shapes)
+    ]
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,17 @@
+from repro.graphs.graph import LabelledGraph
+from repro.graphs.partition import (
+    hash_partition,
+    metis_like_partition,
+    fennel_stream_partition,
+)
+from repro.graphs.metrics import edge_cut, partition_balance, partition_sizes
+
+__all__ = [
+    "LabelledGraph",
+    "hash_partition",
+    "metis_like_partition",
+    "fennel_stream_partition",
+    "edge_cut",
+    "partition_balance",
+    "partition_sizes",
+]

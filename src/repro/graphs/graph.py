@@ -1,0 +1,146 @@
+"""Labelled graph container.
+
+The graph is stored once on the host as numpy arrays (CSR + symmetric edge
+list) and exposed to JAX as plain int32/float32 arrays.  All TAPER
+computations are expressed over the *directed, symmetrised* edge list
+``(src[i], dst[i])`` — an undirected edge appears in both directions, which
+matches the paper's traversal semantics (Gremlin ``both()`` steps).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class LabelledGraph:
+    """A vertex-labelled graph ``G = (V, E, L_V, l)``.
+
+    Attributes:
+      n: number of vertices.
+      labels: ``(n,)`` int32 — label id per vertex.
+      label_names: label id -> human readable name.
+      src, dst: ``(m,)`` int32 symmetric directed edge list, sorted by
+        ``(src, dst)``.
+      row_ptr: ``(n+1,)`` int64 CSR offsets into ``dst`` for each ``src``.
+    """
+
+    n: int
+    labels: np.ndarray
+    label_names: List[str]
+    src: np.ndarray
+    dst: np.ndarray
+    row_ptr: np.ndarray = field(repr=False, default=None)
+
+    def __post_init__(self):
+        self.labels = np.asarray(self.labels, dtype=np.int32)
+        self.src = np.asarray(self.src, dtype=np.int32)
+        self.dst = np.asarray(self.dst, dtype=np.int32)
+        if self.row_ptr is None:
+            order = np.lexsort((self.dst, self.src))
+            self.src = self.src[order]
+            self.dst = self.dst[order]
+            counts = np.bincount(self.src, minlength=self.n)
+            self.row_ptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+
+    # -- construction -----------------------------------------------------
+    @staticmethod
+    def from_undirected_edges(
+        n: int,
+        labels: Sequence[int],
+        edges: np.ndarray,
+        label_names: Optional[List[str]] = None,
+        dedup: bool = True,
+    ) -> "LabelledGraph":
+        """Build from an ``(e, 2)`` array of undirected edges (no self loops)."""
+        edges = np.asarray(edges, dtype=np.int64)
+        if edges.size == 0:
+            edges = edges.reshape(0, 2)
+        keep = edges[:, 0] != edges[:, 1]  # paper fn.6: no self loops
+        edges = edges[keep]
+        sym = np.concatenate([edges, edges[:, ::-1]], axis=0)
+        if dedup and len(sym):
+            key = sym[:, 0] * np.int64(n) + sym[:, 1]
+            _, idx = np.unique(key, return_index=True)
+            sym = sym[idx]
+        labels = np.asarray(labels, dtype=np.int32)
+        if label_names is None:
+            label_names = [f"L{i}" for i in range(int(labels.max(initial=-1)) + 1)]
+        return LabelledGraph(
+            n=n,
+            labels=labels,
+            label_names=list(label_names),
+            src=sym[:, 0].astype(np.int32),
+            dst=sym[:, 1].astype(np.int32),
+        )
+
+    # -- properties --------------------------------------------------------
+    @property
+    def m(self) -> int:
+        """Number of *directed* edges (2x undirected count)."""
+        return int(self.src.shape[0])
+
+    @property
+    def n_labels(self) -> int:
+        return len(self.label_names)
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return (self.row_ptr[1:] - self.row_ptr[:-1]).astype(np.int64)
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.dst[self.row_ptr[v] : self.row_ptr[v + 1]]
+
+    def label_counts(self) -> np.ndarray:
+        """(n_labels,) number of vertices per label."""
+        return np.bincount(self.labels, minlength=self.n_labels)
+
+    def neighbor_label_counts(self) -> np.ndarray:
+        """(n, n_labels) int32 — ``cnt[u, l]`` neighbours of u with label l."""
+        flat = self.src.astype(np.int64) * self.n_labels + self.labels[self.dst]
+        cnt = np.bincount(flat, minlength=self.n * self.n_labels)
+        return cnt.reshape(self.n, self.n_labels).astype(np.int32)
+
+    def undirected_edge_count(self) -> int:
+        return self.m // 2
+
+    def subgraph_mask(self, vmask: np.ndarray) -> "LabelledGraph":
+        """Induced subgraph on the vertices where ``vmask`` is True.
+
+        Vertex ids are compacted; returns the subgraph (labels preserved).
+        """
+        idx = np.nonzero(vmask)[0]
+        remap = -np.ones(self.n, dtype=np.int64)
+        remap[idx] = np.arange(idx.size)
+        emask = vmask[self.src] & vmask[self.dst]
+        s, d = remap[self.src[emask]], remap[self.dst[emask]]
+        return LabelledGraph(
+            n=int(idx.size),
+            labels=self.labels[idx],
+            label_names=self.label_names,
+            src=s.astype(np.int32),
+            dst=d.astype(np.int32),
+        )
+
+    def validate(self) -> None:
+        assert self.labels.shape == (self.n,)
+        assert self.src.shape == self.dst.shape
+        assert self.row_ptr.shape == (self.n + 1,)
+        assert self.row_ptr[-1] == self.m
+        if self.m:
+            assert self.src.min() >= 0 and self.src.max() < self.n
+            assert self.dst.min() >= 0 and self.dst.max() < self.n
+        assert self.labels.min(initial=0) >= 0
+        assert self.labels.max(initial=0) < self.n_labels
+
+    def stats(self) -> Dict[str, float]:
+        deg = self.degrees
+        return {
+            "n": self.n,
+            "m_undirected": self.undirected_edge_count(),
+            "n_labels": self.n_labels,
+            "avg_degree": float(deg.mean()) if self.n else 0.0,
+            "max_degree": int(deg.max()) if self.n else 0,
+        }

@@ -1,0 +1,24 @@
+"""Partitioning quality metrics (workload-agnostic ones; ipt lives in
+repro.workload.executor since it needs query execution)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.graph import LabelledGraph
+
+
+def edge_cut(g: LabelledGraph, part: np.ndarray) -> int:
+    """Number of undirected edges crossing partitions."""
+    cut = part[g.src] != part[g.dst]
+    return int(cut.sum() // 2)
+
+
+def partition_sizes(part: np.ndarray, k: int) -> np.ndarray:
+    return np.bincount(part, minlength=k)
+
+
+def partition_balance(part: np.ndarray, k: int) -> float:
+    """max partition size / ideal size; 1.0 = perfectly balanced."""
+    sizes = partition_sizes(part, k)
+    ideal = part.shape[0] / k
+    return float(sizes.max() / ideal) if ideal > 0 else 1.0

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package ships:
+  kernel.py — pl.pallas_call body with explicit BlockSpec VMEM tiling
+  ops.py    — jit'd wrapper (+ preprocessing, + XLA fallback used on CPU)
+  ref.py    — pure-jnp oracle the kernel is validated against
+
+Kernels (DESIGN.md §6):
+  vm_step         — TAPER's Visitor-Matrix DP edge propagation (the paper's
+                    Alg. 1 hot loop as a label-masked SpMM)
+  segment_spmm    — GNN message passing (gather-scale-scatter)
+  flash_attention — LM prefill blocked online softmax
+  embedding_bag   — DLRM multi-hot lookup as vocab-tiled one-hot matmul
+
+All kernels are TPU-targeted and validated with ``interpret=True`` on CPU
+(tests/test_kernels.py sweeps shapes/dtypes via hypothesis).
+"""

@@ -1,0 +1,4 @@
+from repro.kernels.embedding_bag.ops import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_reference
+
+__all__ = ["embedding_bag_pallas", "embedding_bag_reference"]

@@ -1,0 +1,29 @@
+"""jit wrapper with combiner handling + XLA fallback."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_tiled
+from repro.kernels.embedding_bag.ref import embedding_bag_reference
+
+
+@partial(jax.jit, static_argnames=("combiner", "block_b", "block_v",
+                                   "interpret", "use_pallas"))
+def embedding_bag_pallas(
+    table: jnp.ndarray,
+    ids: jnp.ndarray,
+    combiner: str = "sum",
+    block_b: int = 128,
+    block_v: int = 512,
+    interpret: bool = True,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    if not use_pallas:
+        return embedding_bag_reference(table, ids, combiner)
+    out = embedding_bag_tiled(table, ids, block_b, block_v, interpret)
+    if combiner == "mean":
+        out = out / ids.shape[1]
+    return out

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: multi-hot embedding bag (sum/mean combiner)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_reference(
+    table: jnp.ndarray,       # (V, d)
+    ids: jnp.ndarray,         # (B, H) int32
+    combiner: str = "sum",
+) -> jnp.ndarray:
+    B, H = ids.shape
+    rows = jnp.take(table, ids.reshape(-1), axis=0)
+    seg = jnp.repeat(jnp.arange(B), H)
+    out = jax.ops.segment_sum(rows, seg, num_segments=B)
+    if combiner == "mean":
+        out = out / H
+    return out

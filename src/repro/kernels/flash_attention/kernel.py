@@ -1,0 +1,124 @@
+"""FlashAttention TPU kernel (Dao et al. arXiv:2205.14135, TPU-adapted).
+
+Blocked online softmax: grid = (B*H, n_q_blocks, n_kv_blocks) with the KV
+axis innermost.  Running max / denominator / accumulator live in VMEM
+scratch carried across KV grid steps; the output block is written on the
+last KV step.  Causal + sliding-window masks are applied per block, and
+blocks that are fully masked (above the causal diagonal or outside the
+window) are skipped via pl.when.
+
+BlockSpecs keep one (block_q, d) Q tile and one (block_k, d) KV tile in VMEM
+per step — d is the full head dim (MXU-aligned when d in {64, 128, 256}).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, block_q: int, block_k: int, n_kv: int,
+                 causal: bool, window: Optional[int], seq_kv: int):
+    q_i = pl.program_id(1)
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = q_i * block_q
+    kv_start = kv_i * block_k
+    run = jnp.asarray(True)
+    if causal:
+        run = run & (kv_start <= q_start + block_q - 1)
+    if window is not None:
+        run = run & (kv_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)            # (block_q, d)
+        k = k_ref[0].astype(jnp.float32)            # (block_k, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (block_q, block_k)
+        q_pos = q_start + jax.lax.iota(jnp.int32, block_q)
+        kv_pos = kv_start + jax.lax.iota(jnp.int32, block_k)
+        mask = kv_pos[None, :] < seq_kv
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        # fully-masked rows (m_new == NEG_INF) contribute nothing
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kv_i == n_kv - 1)
+    def _flush():
+        o_ref[0, ...] = (acc_scr[...] /
+                         jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q: jnp.ndarray,           # (BH, Sq, D)
+    k: jnp.ndarray,           # (BH, Skv, D)
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    n_q = math.ceil(Sq / block_q)
+    n_kv = math.ceil(Skv / block_k)
+    pad_q = n_q * block_q - Sq
+    pad_k = n_kv * block_k - Skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+
+    kernel = functools.partial(
+        _attn_kernel, scale=1.0 / math.sqrt(D), block_q=block_q,
+        block_k=block_k, n_kv=n_kv, causal=causal, window=window, seq_kv=Skv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, n_q * block_q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq, :]

@@ -1,0 +1,47 @@
+"""jit'd wrapper: GQA layout handling + XLA fallback.
+
+``flash_attention(q, k, v)`` takes (B, S, H, D) / (B, S, KV, D) (the model's
+layout), expands GQA groups, and dispatches to the Pallas kernel (TPU) or
+the blocked-scan XLA path (CPU / fallback).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret", "use_pallas"))
+def flash_attention(
+    q: jnp.ndarray,            # (B, Sq, H, D)
+    k: jnp.ndarray,            # (B, Skv, KV, D)
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if not use_pallas:
+        from repro.models.layers import attention
+
+        return attention(q, k, v, causal=causal, window=window)
+    # expand KV heads to full head count, flatten (B, H) into the grid axis
+    k_full = jnp.repeat(k, G, axis=2)
+    v_full = jnp.repeat(v, G, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k_full.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
+    vf = v_full.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
+    out = flash_attention_bhsd(
+        qf, kf, vf, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

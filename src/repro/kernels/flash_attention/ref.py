@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for flash attention (naive full score matrix)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_reference(
+    q: jnp.ndarray,          # (B, Sq, H, D)
+    k: jnp.ndarray,          # (B, Skv, H, D)  (same head count; GQA handled by caller)
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    kv_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window is not None:
+        mask &= kv_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows produce 0 (matches the kernel's convention)
+    any_valid = mask.any(axis=-1)
+    p = p * any_valid[None, None, :, None]
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.segment_spmm.ops import segment_spmm
+from repro.kernels.segment_spmm.ref import segment_spmm_reference
+
+__all__ = ["segment_spmm", "segment_spmm_reference"]

@@ -1,0 +1,82 @@
+"""Gather-scale-scatter SpMM TPU kernel (GNN message passing).
+
+TPU adaptation of the GE-SpMM/FusedMM regime (taxonomy §B.3): edges are
+pre-sorted by destination and padded so each edge block maps to exactly ONE
+destination-node block (ops.py does the packing).  The grid runs over edge
+blocks with a scalar-prefetched per-block destination-block index — the
+output BlockSpec's index_map reads it, so consecutive edge blocks revisit
+the same output VMEM tile and accumulate in place.
+
+The scatter itself is a one-hot matmul: onehot(local_dst)^T @ msgs is a
+(block_n x block_e) @ (block_e x F) MXU contraction — systolic-friendly,
+no per-row scatter.  Gather of source rows uses in-VMEM dynamic indexing
+(x tiles are resident; for graphs whose feature matrix exceeds VMEM the
+feature dim F is tiled by the grid's second axis).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmm_kernel(meta_ref,  # scalar prefetch: (EB, 2) [dst_block, is_first]
+                 src_ref, dstloc_ref, w_ref, x_ref, o_ref, *,
+                 block_n: int, block_e: int):
+    e_i = pl.program_id(0)
+    is_first = meta_ref[e_i, 1]
+
+    @pl.when(is_first == 1)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    src = src_ref[...]                       # (block_e,)
+    dst_loc = dstloc_ref[...]                # (block_e,) in [0, block_n)
+    w = w_ref[...]                           # 0 on padded edges
+    msgs = x_ref[src] * w[:, None].astype(x_ref.dtype)        # (block_e, F_t)
+    onehot = (dst_loc[None, :] == jax.lax.iota(jnp.int32, block_n)[:, None])
+    contrib = jax.lax.dot_general(
+        onehot.astype(msgs.dtype), msgs,
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    o_ref[...] += contrib.astype(o_ref.dtype)
+
+
+def segment_spmm_packed(
+    x: jnp.ndarray,            # (n, F)
+    src: jnp.ndarray,          # (E_pad,) packed/sorted source ids
+    dst_local: jnp.ndarray,    # (E_pad,) destination offset within its block
+    w: jnp.ndarray,            # (E_pad,) weights, 0 on padding
+    meta: jnp.ndarray,         # (EB, 2) int32 [dst_block_id, is_first]
+    n_blocks_out: int,
+    block_n: int,
+    block_e: int,
+    block_f: int = 0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    E_pad = src.shape[0]
+    n, F = x.shape
+    EB = E_pad // block_e
+    block_f = block_f or F
+    FB = F // block_f
+    kernel = functools.partial(_spmm_kernel, block_n=block_n, block_e=block_e)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(EB, FB),
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda e, f, meta: (e,)),
+            pl.BlockSpec((block_e,), lambda e, f, meta: (e,)),
+            pl.BlockSpec((block_e,), lambda e, f, meta: (e,)),
+            pl.BlockSpec((n, block_f), lambda e, f, meta: (0, f)),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_n, block_f), lambda e, f, meta: (meta[e, 0], f)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_blocks_out * block_n, F), x.dtype),
+        interpret=interpret,
+    )(meta, src, dst_local, w, x)

@@ -1,0 +1,103 @@
+"""Wrapper: CSR packing (host-side, cached) + pallas_call + XLA fallback.
+
+``pack_edges`` sorts edges by destination and pads each destination block's
+edge list to a multiple of ``block_e``, so every edge block belongs to
+exactly one output block (the kernel's scalar-prefetch contract).  Padding
+edges carry weight 0 and scatter to row 0 of their block (a no-op).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.segment_spmm.kernel import segment_spmm_packed
+from repro.kernels.segment_spmm.ref import segment_spmm_reference
+
+
+@dataclass
+class PackedEdges:
+    src: np.ndarray          # (E_pad,)
+    dst_local: np.ndarray    # (E_pad,)
+    meta: np.ndarray         # (EB, 2) [dst_block_id, is_first]
+    pad_mask: np.ndarray     # (E_pad,) True on real edges
+    n_blocks_out: int
+    block_n: int
+    block_e: int
+
+
+def pack_edges(edge_src: np.ndarray, edge_dst: np.ndarray, n: int,
+               block_n: int = 128, block_e: int = 256) -> PackedEdges:
+    edge_src = np.asarray(edge_src)
+    edge_dst = np.asarray(edge_dst)
+    order = np.argsort(edge_dst, kind="stable")
+    src_s, dst_s = edge_src[order], edge_dst[order]
+    n_blocks_out = (n + block_n - 1) // block_n
+    blk = dst_s // block_n
+
+    src_chunks, dstloc_chunks, mask_chunks, meta = [], [], [], []
+    for b in range(n_blocks_out):
+        sel = blk == b
+        cnt = int(sel.sum())
+        n_eb = max(1, (cnt + block_e - 1) // block_e)
+        pad = n_eb * block_e - cnt
+        src_chunks.append(np.concatenate([src_s[sel], np.zeros(pad, src_s.dtype)]))
+        dstloc_chunks.append(np.concatenate(
+            [dst_s[sel] - b * block_n, np.zeros(pad, dst_s.dtype)]))
+        mask_chunks.append(np.concatenate(
+            [np.ones(cnt, bool), np.zeros(pad, bool)]))
+        for j in range(n_eb):
+            meta.append((b, 1 if j == 0 else 0))
+    return PackedEdges(
+        src=np.concatenate(src_chunks).astype(np.int32),
+        dst_local=np.concatenate(dstloc_chunks).astype(np.int32),
+        meta=np.asarray(meta, np.int32),
+        pad_mask=np.concatenate(mask_chunks),
+        n_blocks_out=n_blocks_out,
+        block_n=block_n,
+        block_e=block_e,
+    )
+
+
+def segment_spmm(
+    x: jnp.ndarray,
+    packed: PackedEdges,
+    edge_w: jnp.ndarray,       # (E_pad,) weights aligned with packed order
+    n_out: int,
+    interpret: bool = True,
+    use_pallas: bool = True,
+    block_f: int = 0,
+) -> jnp.ndarray:
+    """Compute out[dst] += w_e * x[src] over packed edges; returns (n_out, F)."""
+    if not use_pallas:
+        # reconstruct global destinations from the packing
+        dst_block = np.repeat(packed.meta[:, 0], packed.block_e)
+        dst_global = jnp.asarray(dst_block * packed.block_n) + jnp.asarray(
+            packed.dst_local)
+        return segment_spmm_reference(
+            x, jnp.asarray(packed.src), dst_global, edge_w, n_out)
+    out = segment_spmm_packed(
+        x,
+        jnp.asarray(packed.src),
+        jnp.asarray(packed.dst_local),
+        edge_w,
+        jnp.asarray(packed.meta),
+        packed.n_blocks_out,
+        packed.block_n,
+        packed.block_e,
+        block_f=block_f,
+        interpret=interpret,
+    )
+    return out[:n_out]
+
+
+def pack_weights(packed: PackedEdges, edge_src, edge_dst, edge_w) -> jnp.ndarray:
+    """Reorder raw per-edge weights into packed order (0 on padding)."""
+    order = np.argsort(np.asarray(edge_dst), kind="stable")
+    w_sorted = np.asarray(edge_w)[order]
+    out = np.zeros(packed.src.shape[0], w_sorted.dtype)
+    out[packed.pad_mask] = w_sorted
+    return jnp.asarray(out)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: edge-weighted gather-scatter SpMM.
+
+out[dst] += w_e * x[src]  — the GNN message-passing primitive.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_spmm_reference(
+    x: jnp.ndarray,          # (n, F) node features
+    edge_src: jnp.ndarray,   # (E,) int32
+    edge_dst: jnp.ndarray,   # (E,) int32
+    edge_w: jnp.ndarray,     # (E,) float
+    n_out: int,
+) -> jnp.ndarray:
+    msgs = x[edge_src] * edge_w[:, None].astype(x.dtype)
+    return jax.ops.segment_sum(msgs, edge_dst, num_segments=n_out)

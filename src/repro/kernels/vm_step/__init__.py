@@ -1,0 +1,4 @@
+from repro.kernels.vm_step.ops import vm_step
+from repro.kernels.vm_step.ref import vm_step_reference
+
+__all__ = ["vm_step", "vm_step_reference"]

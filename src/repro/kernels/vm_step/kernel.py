@@ -1,0 +1,88 @@
+"""TAPER Visitor-Matrix DP edge-propagation TPU kernel.
+
+The paper's Alg. 1 hot loop, reformulated (DESIGN.md §2) as a label-masked
+SpMM.  Same packing contract as segment_spmm (edges sorted by destination,
+one destination block per edge block, scalar-prefetched output index), with
+the per-edge trie transition fused in:
+
+    per edge block: A   = alpha[src]              gather   (block_e, N)
+                    M   = A x T[label(dst)]       batched tiny matmul
+                    out += onehot(dst_local)^T M  MXU scatter
+
+The trie transition tensor T (L x N x N, ~ 12x24x24 floats) lives wholly in
+VMEM — the intensional workload summary is small by construction (paper §4),
+which is what makes this kernel VMEM-friendly at any graph size.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _vm_kernel(meta_ref, src_ref, dstloc_ref, dstlab_ref, invcnt_ref,
+               alpha_ref, T_ref, o_ref, *, block_n: int, block_e: int):
+    e_i = pl.program_id(0)
+    is_first = meta_ref[e_i, 1]
+
+    @pl.when(is_first == 1)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    src = src_ref[...]                        # (block_e,)
+    dst_loc = dstloc_ref[...]
+    dst_lab = dstlab_ref[...]
+    inv_cnt = invcnt_ref[...]                 # 0 on padded edges
+
+    A = alpha_ref[src]                        # (block_e, N)
+    Tsel = T_ref[dst_lab]                     # (block_e, N, N)
+    M = jnp.einsum("en,enm->em", A, Tsel,
+                   preferred_element_type=jnp.float32)
+    M = M * inv_cnt[:, None]
+    onehot = (dst_loc[None, :] == jax.lax.iota(jnp.int32, block_n)[:, None])
+    contrib = jax.lax.dot_general(
+        onehot.astype(M.dtype), M, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[...] += contrib.astype(o_ref.dtype)
+
+
+def vm_step_packed(
+    alpha: jnp.ndarray,        # (n, N)
+    T: jnp.ndarray,            # (L, N, N)
+    src: jnp.ndarray,          # (E_pad,)
+    dst_local: jnp.ndarray,    # (E_pad,)
+    dst_label: jnp.ndarray,    # (E_pad,)
+    inv_cnt: jnp.ndarray,      # (E_pad,) 0 on padding
+    meta: jnp.ndarray,         # (EB, 2)
+    n_blocks_out: int,
+    block_n: int,
+    block_e: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    E_pad = src.shape[0]
+    n, N = alpha.shape
+    L = T.shape[0]
+    EB = E_pad // block_e
+    kernel = functools.partial(_vm_kernel, block_n=block_n, block_e=block_e)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(EB,),
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda e, meta: (e,)),
+            pl.BlockSpec((block_e,), lambda e, meta: (e,)),
+            pl.BlockSpec((block_e,), lambda e, meta: (e,)),
+            pl.BlockSpec((block_e,), lambda e, meta: (e,)),
+            pl.BlockSpec((n, N), lambda e, meta: (0, 0)),
+            pl.BlockSpec((L, N, N), lambda e, meta: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, N), lambda e, meta: (meta[e, 0], 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_blocks_out * block_n, N), alpha.dtype),
+        interpret=interpret,
+    )(meta, src, dst_local, dst_label, inv_cnt, alpha, T)

@@ -1,0 +1,56 @@
+"""Wrapper: reuses segment_spmm's edge packing; adds label/inv-cnt channels."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.segment_spmm.ops import PackedEdges, pack_edges
+from repro.kernels.vm_step.kernel import vm_step_packed
+from repro.kernels.vm_step.ref import vm_step_reference
+
+
+def pack_vm_inputs(edge_src, edge_dst, labels, cnt, n: int,
+                   block_n: int = 128, block_e: int = 256):
+    """Pack edges (sorted by dst) and per-edge label / 1/cnt channels."""
+    packed = pack_edges(edge_src, edge_dst, n, block_n, block_e)
+    order = np.argsort(np.asarray(edge_dst), kind="stable")
+    dst_lab_sorted = np.asarray(labels)[np.asarray(edge_dst)[order]]
+    src_sorted = np.asarray(edge_src)[order]
+    inv = 1.0 / np.maximum(
+        np.asarray(cnt)[src_sorted, dst_lab_sorted], 1.0)
+    E_pad = packed.src.shape[0]
+    dst_label = np.zeros(E_pad, np.int32)
+    inv_cnt = np.zeros(E_pad, np.float32)
+    dst_label[packed.pad_mask] = dst_lab_sorted
+    inv_cnt[packed.pad_mask] = inv
+    return packed, jnp.asarray(dst_label), jnp.asarray(inv_cnt)
+
+
+def vm_step(
+    alpha: jnp.ndarray,
+    T: jnp.ndarray,
+    packed: PackedEdges,
+    dst_label: jnp.ndarray,
+    inv_cnt: jnp.ndarray,
+    n: int,
+    interpret: bool = True,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    if not use_pallas:
+        dst_block = np.repeat(packed.meta[:, 0], packed.block_e)
+        dst_global = jnp.asarray(dst_block * packed.block_n) + jnp.asarray(
+            packed.dst_local)
+        return vm_step_reference(
+            alpha, T, jnp.asarray(packed.src), dst_global, inv_cnt,
+            dst_label, n)
+    out = vm_step_packed(
+        alpha, T,
+        jnp.asarray(packed.src), jnp.asarray(packed.dst_local),
+        dst_label, inv_cnt, jnp.asarray(packed.meta),
+        packed.n_blocks_out, packed.block_n, packed.block_e,
+        interpret=interpret,
+    )
+    return out[:n]

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for one Visitor-Matrix DP edge-propagation step.
+
+Given alpha (n, N_trie) and the per-destination-label trie transition
+matrices T (L, N, N) with T[l][p, c] = cond_p(c) iff child(p, l) == c:
+
+    alpha_out[w, :] = sum over local edges (u, w):
+        (alpha[u] @ T[label(w)]) / cnt[u, label(w)]
+
+This is exactly the depth-advancing update inside
+repro.core.visitor._build_field_fn, expressed for ALL depths at once (the
+transition matrix is depth-stratified so one matmul advances every state by
+one step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def build_transition(trie_parent, trie_label, trie_cond_p, n_labels: int):
+    """(L, N, N) transition tensor from TrieArrays fields."""
+    import numpy as np
+
+    N = len(trie_parent)
+    T = np.zeros((n_labels, N, N), np.float32)
+    for c in range(N):
+        p, l = int(trie_parent[c]), int(trie_label[c])
+        if p >= 0:
+            T[l, p, c] = float(trie_cond_p[c])
+    return T
+
+
+def vm_step_reference(
+    alpha: jnp.ndarray,       # (n, N)
+    T: jnp.ndarray,           # (L, N, N)
+    edge_src: jnp.ndarray,    # (E,)
+    edge_dst: jnp.ndarray,    # (E,)
+    inv_cnt_e: jnp.ndarray,   # (E,) 1 / cnt[src, label(dst)]
+    dst_label: jnp.ndarray,   # (E,)
+    n: int,
+) -> jnp.ndarray:
+    msgs = jnp.einsum("en,enm->em", alpha[edge_src], T[dst_label])
+    msgs = msgs * inv_cnt_e[:, None]
+    return jax.ops.segment_sum(msgs, edge_dst, num_segments=n)

@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, per-cell step builders, dry-run,
+roofline analysis, training/serving entry points."""

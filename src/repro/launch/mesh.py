@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — jax locks the device count on first
+backend initialisation, and only dryrun.py is allowed to set the 512-device
+flag (in its first two lines, before any other import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(n_devices: int | None = None):
+    """Tiny mesh over however many (host) devices exist — used by sharding
+    unit tests, which run with the default single CPU device."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def chips_in(mesh) -> int:
+    return int(mesh.devices.size)

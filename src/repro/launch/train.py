@@ -1,0 +1,68 @@
+"""Training launcher: ``--arch <id> --shape train_4k`` on the local device
+set (reduced configs for CPU; the production mesh path is exercised by
+dryrun.py).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.registry import get_config
+from repro.optim import AdamW, cosine_schedule
+from repro.train.trainer import Trainer, TrainerConfig
+from repro.utils import get_logger
+
+log = get_logger("launch.train")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (assignment) config instead of reduced")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if cfg.family != "lm":
+        raise SystemExit("launch.train drives LM archs; see examples/ for "
+                         "GNN and DLRM training drivers")
+    if not args.full_config:
+        cfg = cfg.reduced()
+
+    from repro.data.lm import TokenPipeline
+    from repro.models import transformer as tf
+
+    params, _ = tf.init(jax.random.PRNGKey(0), cfg)
+    opt = AdamW(learning_rate=cosine_schedule(1e-3, 20, args.steps))
+    ostate = opt.init(params)
+    step = jax.jit(tf.make_train_step(cfg, opt, remat=False))
+    data = TokenPipeline(cfg.vocab, args.batch, args.seq_len, seed=0)
+
+    def loss_and_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: tf.loss_fn(p, batch, cfg), has_aux=True)(params)
+        return grads, metrics
+
+    trainer = Trainer(
+        TrainerConfig(total_steps=args.steps, checkpoint_every=50,
+                      checkpoint_dir=args.ckpt_dir,
+                      compress_grads=args.compress_grads),
+        step, params, ostate, data,
+        grad_step_fn=jax.jit(loss_and_grads),
+        apply_fn=jax.jit(lambda p, g, o: opt.update(p, g, o)),
+    )
+    trainer.try_resume()
+    out = trainer.run()
+    log.info("done: final loss %.4f", out["metrics"][-1]["loss"])
+
+
+if __name__ == "__main__":
+    main()

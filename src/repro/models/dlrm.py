@@ -1,0 +1,203 @@
+"""DLRM (Naumov et al., arXiv:1906.00091) — recsys kernel regime.
+
+Bottom MLP over dense features, 26 embedding tables (the hot path: JAX has
+no native EmbeddingBag, so it is built here from ``jnp.take`` +
+``jax.ops.segment_sum`` per the assignment), dot-product feature
+interaction, top MLP -> click logit.
+
+Sharding: tables are concatenated row-wise into one (total_rows, d) matrix
+sharded over the ``model`` axis ("rows"); lookups under pjit become
+all-gather/all-to-all of the requested rows.  ``retrieval_cand`` scores one
+query against 10^6 candidates as a single sharded matmul + top-k.
+
+TAPER integration (DESIGN.md §4.2): ``plan_row_placement`` builds the
+co-access graph of embedding rows from a click log and runs TAPER on it;
+``query_span`` measures the shards-touched-per-request metric the placement
+optimises.  benchmarks/dlrm_span.py reports the reduction.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DLRMConfig
+from repro.models.gnn.common import mlp_apply, mlp_init
+
+
+# ---------------------------------------------------------------------------
+# embedding bag (jnp.take + segment_sum — built in-repo, per the assignment)
+# ---------------------------------------------------------------------------
+
+
+def embedding_bag(
+    table: jnp.ndarray,         # (rows, d)
+    ids: jnp.ndarray,           # (B, n_per_bag) int32 — global row ids
+    weights: Optional[jnp.ndarray] = None,
+    combiner: str = "sum",
+) -> jnp.ndarray:
+    """Multi-hot gather-reduce; the Pallas kernel in
+    repro.kernels.embedding_bag is the TPU-optimised twin of this oracle."""
+    B, n = ids.shape
+    rows = jnp.take(table, ids.reshape(-1), axis=0)          # (B*n, d)
+    if weights is not None:
+        rows = rows * weights.reshape(-1, 1)
+    seg = jnp.repeat(jnp.arange(B), n)
+    out = jax.ops.segment_sum(rows, seg, num_segments=B)
+    if combiner == "mean":
+        out = out / n
+    return out
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+def table_offsets(cfg: DLRMConfig) -> np.ndarray:
+    return np.concatenate([[0], np.cumsum(cfg.vocab_sizes)]).astype(np.int64)
+
+
+def init(rng, cfg: DLRMConfig) -> Tuple[Dict, Dict]:
+    keys = jax.random.split(rng, 4)
+    total = cfg.total_rows()
+    emb = jax.random.normal(keys[0], (total, cfg.embed_dim), jnp.float32)
+    emb = emb / math.sqrt(cfg.embed_dim)
+    bot, bot_log = mlp_init(keys[1], (cfg.n_dense,) + cfg.bot_mlp)
+    n_feat = cfg.n_sparse + 1
+    inter = n_feat * (n_feat - 1) // 2 if cfg.interaction == "dot" else 0
+    top, top_log = mlp_init(keys[2], (inter + cfg.bot_mlp[-1],) + cfg.top_mlp)
+    params = {"embedding": emb, "bot": bot, "top": top}
+    logical = {"embedding": ("rows", None), "bot": bot_log, "top": top_log}
+    return params, logical
+
+
+def forward(params, batch: Dict, cfg: DLRMConfig) -> jnp.ndarray:
+    """batch: dense (B, n_dense) float; sparse (B, n_sparse[, multi_hot])
+    int32 with *global* row ids (offsets already applied)."""
+    dense, sparse = batch["dense"], batch["sparse"]
+    B = dense.shape[0]
+    x_bot = mlp_apply(params["bot"], dense, final_act=True)  # (B, d)
+    if sparse.ndim == 2:
+        emb = jnp.take(params["embedding"], sparse.reshape(-1), axis=0)
+        emb = emb.reshape(B, cfg.n_sparse, cfg.embed_dim)
+    else:  # multi-hot: embedding bag per field
+        B_, F, H = sparse.shape
+        emb = embedding_bag(params["embedding"], sparse.reshape(B_ * F, H))
+        emb = emb.reshape(B, cfg.n_sparse, cfg.embed_dim)
+
+    feats = jnp.concatenate([x_bot[:, None, :], emb], axis=1)  # (B, F+1, d)
+    if cfg.interaction == "dot":
+        gram = jnp.einsum("bfd,bgd->bfg", feats, feats)
+        iu = jnp.triu_indices(feats.shape[1], k=1)
+        inter = gram[:, iu[0], iu[1]]                          # (B, F(F+1)/2)
+        z = jnp.concatenate([x_bot, inter], axis=-1)
+    else:
+        z = feats.reshape(B, -1)
+    return mlp_apply(params["top"], z)[:, 0]                   # logits (B,)
+
+
+def loss_fn(params, batch: Dict, cfg: DLRMConfig):
+    logits = forward(params, batch, cfg).astype(jnp.float32)
+    y = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+    auc_proxy = jnp.mean((jax.nn.sigmoid(logits) > 0.5) == (y > 0.5))
+    return loss, {"loss": loss, "acc": auc_proxy}
+
+
+def make_train_step(cfg: DLRMConfig, optimizer):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg), has_aux=True
+        )(params)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def serve_step(params, batch: Dict, cfg: DLRMConfig) -> jnp.ndarray:
+    return jax.nn.sigmoid(forward(params, batch, cfg))
+
+
+def retrieval_step(params, query: Dict, candidates: jnp.ndarray, top_k: int = 100):
+    """Score one user against (n_cand, d) candidate embeddings: sharded
+    matmul + top-k (no loop; the assignment's batched-dot requirement)."""
+    dense = query["dense"]
+    user = mlp_apply(params["bot"], dense, final_act=True)     # (1, d)
+    scores = (candidates @ user[0]).astype(jnp.float32)        # (n_cand,)
+    return jax.lax.top_k(scores, top_k)
+
+
+# ---------------------------------------------------------------------------
+# TAPER integration: workload-aware row placement
+# ---------------------------------------------------------------------------
+
+
+def coaccess_graph(cfg: DLRMConfig, sparse_batches: Sequence[np.ndarray],
+                   max_rows_per_field: int = 512, min_count: int = 2):
+    """Build the row co-access graph from click-log batches.
+
+    Vertices = (field, row) pairs (hot rows only, capped per field); labels =
+    field ids; edges connect rows co-accessed by one request.  A request is a
+    2-hop label path, so TAPER's trie sees the field-pair traversal pattern —
+    the direct analogue of the paper's query workload."""
+    from repro.graphs.graph import LabelledGraph
+
+    offsets = table_offsets(cfg)
+    # hot rows per field
+    hot: Dict[int, np.ndarray] = {}
+    for f in range(cfg.n_sparse):
+        vals = np.concatenate([b[:, f].reshape(-1) for b in sparse_batches])
+        uniq, cnt = np.unique(vals, return_counts=True)
+        hot[f] = uniq[np.argsort(-cnt)][:max_rows_per_field]
+    remap: Dict[int, int] = {}
+    labels = []
+    for f in range(cfg.n_sparse):
+        for r in hot[f]:
+            remap[int(r)] = len(labels)
+            labels.append(f)
+    edges = []
+    for b in sparse_batches:
+        ids = b if b.ndim == 2 else b.reshape(b.shape[0], -1)
+        for row in ids[: 512]:
+            present = [remap[int(v)] for v in row if int(v) in remap]
+            edges.extend(
+                (present[i], present[j])
+                for i in range(len(present))
+                for j in range(i + 1, len(present))
+            )
+    edges = np.asarray(edges, np.int64).reshape(-1, 2)
+    # keep only systematically co-accessed pairs: a pair seen once is zipf
+    # noise, a pair seen repeatedly is workload structure (the signal the
+    # paper's traversal frequencies carry)
+    n_v = len(labels)
+    if len(edges):
+        lo = np.minimum(edges[:, 0], edges[:, 1])
+        hi = np.maximum(edges[:, 0], edges[:, 1])
+        key = lo * n_v + hi
+        uniq, counts = np.unique(key, return_counts=True)
+        keep = uniq[counts >= min_count]
+        edges = np.stack([keep // n_v, keep % n_v], axis=1)
+    g = LabelledGraph.from_undirected_edges(
+        n_v, np.asarray(labels, np.int32), edges,
+        [f"F{f}" for f in range(cfg.n_sparse)],
+    )
+    inverse = np.full(len(labels), -1, np.int64)
+    for orig, local in remap.items():
+        inverse[local] = orig
+    return g, inverse
+
+
+def query_span(part_of_row: np.ndarray, sparse: np.ndarray, k: int) -> float:
+    """Average number of shards touched per request (SWORD's 'query span')."""
+    B = sparse.shape[0]
+    ids = sparse.reshape(B, -1)
+    parts = part_of_row[ids]
+    span = np.array([len(np.unique(p)) for p in parts])
+    return float(span.mean())

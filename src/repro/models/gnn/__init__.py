@@ -1,0 +1,2 @@
+"""GNN model family: SpMM regime (GCN, GIN), irrep tensor-product regime
+(NequIP), and SO(2)/eSCN regime (EquiformerV2)."""

@@ -1,0 +1,121 @@
+"""Shared GNN substrate: batch container, segment message passing, RBF.
+
+JAX has no native sparse message passing — per the assignment, SpMM-regime
+aggregation is built on ``jax.ops.segment_sum`` over an edge index (the
+scatter path), with the Pallas kernel in repro.kernels.segment_spmm as the
+TPU-optimised twin.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class GraphBatch:
+    """Padded (possibly batched) graph.
+
+    node_feat: (N, F) float; positions: (N, 3) or None; edge_src/dst: (E,)
+    int32 (padded entries masked); graph_id: (N,) int32 for pooled readout;
+    targets: (N,) or (G,) — node labels / graph labels / energies.
+    """
+
+    node_feat: jnp.ndarray
+    edge_src: jnp.ndarray
+    edge_dst: jnp.ndarray
+    node_mask: jnp.ndarray
+    edge_mask: jnp.ndarray
+    targets: jnp.ndarray
+    positions: Optional[jnp.ndarray] = None
+    graph_id: Optional[jnp.ndarray] = None
+    n_graphs: int = 1
+
+    def as_dict(self) -> Dict:
+        out = {
+            "node_feat": self.node_feat,
+            "edge_src": self.edge_src,
+            "edge_dst": self.edge_dst,
+            "node_mask": self.node_mask,
+            "edge_mask": self.edge_mask,
+            "targets": self.targets,
+        }
+        if self.positions is not None:
+            out["positions"] = self.positions
+        if self.graph_id is not None:
+            out["graph_id"] = self.graph_id
+        return out
+
+
+def scatter_sum(values: jnp.ndarray, index: jnp.ndarray, n: int,
+                mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """segment_sum with optional edge mask; values (E, ...), index (E,)."""
+    if mask is not None:
+        values = values * mask.reshape((-1,) + (1,) * (values.ndim - 1))
+        index = jnp.where(mask, index, n)  # park masked edges in a waste bin
+        return jax.ops.segment_sum(values, index, num_segments=n + 1)[:n]
+    return jax.ops.segment_sum(values, index, num_segments=n)
+
+
+def degrees(edge_dst: jnp.ndarray, n: int,
+            edge_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    ones = jnp.ones_like(edge_dst, dtype=jnp.float32)
+    return scatter_sum(ones, edge_dst, n, edge_mask)
+
+
+def gather(x: jnp.ndarray, index: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(x, index, axis=0)
+
+
+def segment_softmax(logits: jnp.ndarray, index: jnp.ndarray, n: int,
+                    mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Per-destination softmax over edges; logits (E, ...), index (E,)."""
+    big_neg = -1e30
+    if mask is not None:
+        logits = jnp.where(mask.reshape((-1,) + (1,) * (logits.ndim - 1)),
+                           logits, big_neg)
+    seg_max = jax.ops.segment_max(logits, index, num_segments=n)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    ex = jnp.exp(logits - seg_max[index])
+    if mask is not None:
+        ex = ex * mask.reshape((-1,) + (1,) * (ex.ndim - 1))
+    denom = jax.ops.segment_sum(ex, index, num_segments=n)
+    return ex / jnp.maximum(denom[index], 1e-30)
+
+
+def bessel_rbf(dist: jnp.ndarray, n_rbf: int, cutoff: float) -> jnp.ndarray:
+    """Bessel radial basis with polynomial cutoff envelope (NequIP-style)."""
+    d = jnp.maximum(dist, 1e-6)[..., None]
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    basis = jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * d / cutoff) / d
+    x = jnp.clip(dist / cutoff, 0.0, 1.0)[..., None]
+    env = 1.0 - 10.0 * x ** 3 + 15.0 * x ** 4 - 6.0 * x ** 5
+    return basis * env
+
+
+def mlp_init(rng, dims, dtype=jnp.float32):
+    params = []
+    logical = []
+    keys = jax.random.split(rng, len(dims) - 1)
+    for k, (a, b) in zip(keys, zip(dims, dims[1:])):
+        w = jax.random.normal(k, (a, b), jnp.float32) / np.sqrt(a)
+        params.append({"w": w.astype(dtype), "b": jnp.zeros((b,), dtype)})
+        logical.append({"w": (None, None), "b": (None,)})
+    return params, logical
+
+
+def mlp_apply(params, x, act=jax.nn.silu, final_act=False):
+    for i, p in enumerate(params):
+        x = x @ p["w"] + p["b"]
+        if i < len(params) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def layer_norm(x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)

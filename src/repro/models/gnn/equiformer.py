@@ -1,0 +1,185 @@
+"""EquiformerV2 (Liao et al., arXiv:2306.12059) — equivariant graph
+attention with eSCN SO(2) convolutions.
+
+The eSCN trick (Passaro & Zitnick): rotating each edge's SH-coefficient
+features into a frame where the edge points at +z makes the tensor-product
+convolution block-diagonal in m — an O(L^6) CG contraction becomes O(L^3)
+per-m channel mixing.  Per edge:
+
+  1. rotate source features into the edge frame:  x~ = D(R_e) x_src
+  2. SO(2) conv for |m| <= m_max (distance-conditioned gates g_m(rbf) and
+     learned channel mixes W_m pairing the (+m, -m) coefficient vectors):
+        y_{+m} = g (W1 x_{+m} - W2 x_{-m});  y_{-m} = g (W2 x_{+m} + W1 x_{-m})
+  3. attention: per-head logits from the rotated scalar (m=0) channel,
+     softmax over incoming edges (segment softmax), alpha-weighted messages
+  4. rotate back: msg = D(R_e)^T y, aggregate into the destination.
+
+Followed by an equivariant RMS norm and a gated FFN on the scalar block.
+m truncation (m_max=2 at l_max=6) is the assigned configuration.
+Equivariance is property-tested.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.models.gnn import so3
+from repro.models.gnn.common import (
+    bessel_rbf,
+    gather,
+    mlp_apply,
+    mlp_init,
+    scatter_sum,
+    segment_softmax,
+)
+
+
+def _m_indices(l_max: int, m: int) -> List[int]:
+    """Flat SH indices of coefficient m for every l >= |m|."""
+    return [so3.sh_index(l, m) for l in range(abs(m), l_max + 1)]
+
+
+def init(rng, cfg: GNNConfig, n_species: int) -> Tuple[Dict, Dict]:
+    C, L, M = cfg.d_hidden, cfg.l_max, cfg.m_max
+    keys = jax.random.split(rng, 4 + cfg.n_layers)
+    params: Dict = {
+        "embed": jax.random.normal(keys[0], (n_species, C), jnp.float32) / np.sqrt(n_species),
+    }
+    logical: Dict = {"embed": (None, None)}
+    layers, layers_log = [], []
+    for i in range(cfg.n_layers):
+        ks = jax.random.split(keys[2 + i], 8)
+        layer = {
+            # per-m channel mixes (W1, W2); m=0 needs only W1
+            "w0": jax.random.normal(ks[0], (C, C), jnp.float32) / np.sqrt(C),
+            "radial": mlp_init(ks[1], (cfg.n_rbf, 32, (2 * M + 1)))[0],
+            "attn": mlp_init(ks[2], (C, 32, cfg.n_heads))[0],
+            "ffn1": jax.random.normal(ks[3], (C, 2 * C), jnp.float32) / np.sqrt(C),
+            "ffn2": jax.random.normal(ks[4], (2 * C, C), jnp.float32) / np.sqrt(2 * C),
+            "ffn_gate": jax.random.normal(ks[5], (C, L * C), jnp.float32) / np.sqrt(C),
+            "out": jax.random.normal(ks[6], (C, C), jnp.float32) / np.sqrt(C),
+        }
+        layer_log = {
+            "w0": (None, None),
+            "radial": [{"w": (None, None), "b": (None,)} for _ in range(2)],
+            "attn": [{"w": (None, None), "b": (None,)} for _ in range(2)],
+            "ffn1": (None, None), "ffn2": (None, None),
+            "ffn_gate": (None, None), "out": (None, None),
+        }
+        for m in range(1, M + 1):
+            km = jax.random.split(ks[7], 2 * M)
+            layer[f"w{m}_1"] = jax.random.normal(km[2 * m - 2], (C, C), jnp.float32) / np.sqrt(C)
+            layer[f"w{m}_2"] = jax.random.normal(km[2 * m - 1], (C, C), jnp.float32) / np.sqrt(C)
+            layer_log[f"w{m}_1"] = (None, None)
+            layer_log[f"w{m}_2"] = (None, None)
+        layers.append(layer)
+        layers_log.append(layer_log)
+    params["layers"] = layers
+    logical["layers"] = layers_log
+    params["readout"] = mlp_init(keys[1], (C, 32, 1))[0]
+    logical["readout"] = [{"w": (None, None), "b": (None,)} for _ in range(2)]
+    return params, logical
+
+
+def _so2_conv(lp, x_rot, rbf_gates, cfg: GNNConfig):
+    """Blockwise-in-m channel mixing in the edge frame.
+
+    x_rot: (E, C, S); rbf_gates: (E, 2*m_max+1).  Coefficients with |m| >
+    m_max are dropped (the eSCN truncation).
+    """
+    E, C, S = x_rot.shape
+    L, M = cfg.l_max, cfg.m_max
+    y = jnp.zeros_like(x_rot)
+    # m = 0
+    idx0 = jnp.asarray(_m_indices(L, 0))
+    g0 = rbf_gates[:, M][:, None, None]
+    y = y.at[:, :, idx0].set(
+        g0 * jnp.einsum("cd,eds->ecs", lp["w0"], x_rot[:, :, idx0]))
+    for m in range(1, M + 1):
+        ip = jnp.asarray(_m_indices(L, m))
+        im = jnp.asarray(_m_indices(L, -m))
+        gp = rbf_gates[:, M + m][:, None, None]
+        gm = rbf_gates[:, M - m][:, None, None]
+        xp, xm = x_rot[:, :, ip], x_rot[:, :, im]
+        W1, W2 = lp[f"w{m}_1"], lp[f"w{m}_2"]
+        yp = jnp.einsum("cd,eds->ecs", W1, xp) - jnp.einsum("cd,eds->ecs", W2, xm)
+        ym = jnp.einsum("cd,eds->ecs", W2, xp) + jnp.einsum("cd,eds->ecs", W1, xm)
+        y = y.at[:, :, ip].set(gp * yp)
+        y = y.at[:, :, im].set(gm * ym)
+    return y
+
+
+def _equiv_norm(x, l_max: int, eps: float = 1e-6):
+    """RMS norm per l-block over (channel, m)."""
+    outs = []
+    for l in range(l_max + 1):
+        lo, hi = l * l, (l + 1) ** 2
+        blk = x[:, :, lo:hi]
+        rms = jnp.sqrt(jnp.mean(blk ** 2, axis=(1, 2), keepdims=True) + eps)
+        outs.append(blk / rms)
+    return jnp.concatenate(outs, axis=-1)
+
+
+def forward(params, batch: Dict, cfg: GNNConfig, n_graphs: int) -> jnp.ndarray:
+    species = batch["node_feat"]
+    pos = batch["positions"]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    emask, nmask = batch["edge_mask"], batch["node_mask"]
+    n = species.shape[0]
+    C, L = cfg.d_hidden, cfg.l_max
+
+    h = jnp.zeros((n, C, so3.n_sph(L)), jnp.float32)
+    h = h.at[:, :, 0].set(species @ params["embed"])
+
+    r = gather(pos, src) - gather(pos, dst)
+    dist = jnp.linalg.norm(r + 1e-9, axis=-1)
+    rbf = bessel_rbf(dist, cfg.n_rbf, cfg.cutoff)
+    emask = emask & (dist < cfg.cutoff)
+    a, b, g = so3.align_to_z_angles(r)
+    Ds = so3.rotation_block_diag(a, b, g, L)
+
+    n_heads = cfg.n_heads
+    for lp in params["layers"]:
+        # -- eSCN attention block --
+        x_src = gather(h, src)
+        x_rot = so3.rotate_coeffs(x_src, Ds, L)            # into edge frame
+        gates = mlp_apply(lp["radial"], rbf)               # (E, 2M+1)
+        y = _so2_conv(lp, x_rot, gates, cfg)
+        # attention logits from the rotated scalar block + destination scalars
+        inv = y[:, :, 0] + gather(h, dst)[:, :, 0]
+        logits = mlp_apply(lp["attn"], inv)                # (E, H)
+        alpha = segment_softmax(logits, dst, n, emask)     # (E, H)
+        # heads gate channel groups
+        y = y * jnp.repeat(alpha, C // n_heads, axis=1)[:, :, None]
+        msg = so3.rotate_coeffs(y, Ds, L, transpose=True)  # back to global
+        agg = scatter_sum(msg, dst, n, emask)
+        agg = jnp.einsum("cd,nds->ncs", lp["out"], agg)
+        h = h + agg
+        h = _equiv_norm(h, L) * nmask[:, None, None]
+
+        # -- gated FFN on the scalar block --
+        s = h[:, :, 0]
+        f = jax.nn.silu(s @ lp["ffn1"]) @ lp["ffn2"]
+        h = h.at[:, :, 0].add(f)
+        gates_l = jax.nn.sigmoid(s @ lp["ffn_gate"]).reshape(n, L, C)
+        for l in range(1, L + 1):
+            lo, hi = l * l, (l + 1) ** 2
+            h = h.at[:, :, lo:hi].multiply(gates_l[:, l - 1, :, None])
+        h = h * nmask[:, None, None]
+
+    atom_e = mlp_apply(params["readout"], h[:, :, 0])[:, 0] * nmask
+    gid = batch.get("graph_id")
+    if gid is not None:
+        return jax.ops.segment_sum(atom_e, gid, num_segments=n_graphs)
+    return atom_e
+
+
+def loss_fn(params, batch: Dict, cfg: GNNConfig, n_graphs: int):
+    pred = forward(params, batch, cfg, n_graphs)
+    target = batch["targets"].astype(jnp.float32)
+    loss = jnp.mean((pred - target) ** 2)
+    return loss, {"loss": loss, "mae": jnp.mean(jnp.abs(pred - target))}

@@ -1,0 +1,59 @@
+"""GCN (Kipf & Welling, arXiv:1609.02907) — SpMM kernel regime.
+
+X' = act( norm(A + I) X W + b ); sym norm D^-1/2 (A+I) D^-1/2 or mean D^-1 A.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.models.gnn.common import degrees, gather, scatter_sum
+
+
+def init(rng, cfg: GNNConfig, d_in: int) -> Tuple[Dict, Dict]:
+    dims = [d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    keys = jax.random.split(rng, len(dims))
+    params, logical = [], []
+    for k, (a, b) in zip(keys, zip(dims, dims[1:])):
+        w = (jax.random.normal(k, (a, b), jnp.float32) / np.sqrt(a))
+        params.append({"w": w, "b": jnp.zeros((b,), jnp.float32)})
+        logical.append({"w": (None, "feat_model"), "b": ("feat_model",)})
+    return {"layers": params}, {"layers": logical}
+
+
+def forward(params, batch: Dict, cfg: GNNConfig) -> jnp.ndarray:
+    x = batch["node_feat"]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    emask, nmask = batch["edge_mask"], batch["node_mask"]
+    n = x.shape[0]
+    deg = degrees(dst, n, emask) + 1.0  # +1: self loop
+    if cfg.norm == "sym":
+        inv_sqrt = jax.lax.rsqrt(deg)
+        coeff = inv_sqrt[src] * inv_sqrt[dst]
+        self_coeff = 1.0 / deg
+    else:  # mean aggregator
+        coeff = 1.0 / deg[dst]
+        self_coeff = 1.0 / deg
+    for i, p in enumerate(params["layers"]):
+        msgs = gather(x, src) * coeff[:, None]
+        agg = scatter_sum(msgs, dst, n, emask) + x * self_coeff[:, None]
+        x = agg @ p["w"] + p["b"]
+        if i < len(params["layers"]) - 1:
+            x = jax.nn.relu(x)
+    return x * nmask[:, None]
+
+
+def loss_fn(params, batch: Dict, cfg: GNNConfig):
+    logits = forward(params, batch, cfg)
+    labels = batch["targets"]
+    logz = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               labels[:, None], axis=-1)[:, 0]
+    mask = batch["node_mask"].astype(jnp.float32)
+    loss = jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    acc = jnp.sum((logits.argmax(-1) == labels) * mask) / jnp.maximum(mask.sum(), 1.0)
+    return loss, {"loss": loss, "accuracy": acc}

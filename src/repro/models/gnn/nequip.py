@@ -1,0 +1,136 @@
+"""NequIP (Batzner et al., arXiv:2101.03164) — E(3) tensor-product messages.
+
+Features are (N, C, (l_max+1)^2) real-SH coefficient stacks (C channels per
+l).  An interaction layer computes, per edge:
+
+    m^(l3) += w_path(rbf(|r|)) * CG^{l1 l2 l3} ( h_src^(l1) x Y^(l2)(r̂) )
+
+over all allowed paths, aggregates by destination, applies a per-l linear
+self-interaction and a gate nonlinearity (scalars: SiLU; l>0 blocks scaled by
+a sigmoid gate from dedicated scalar channels).  Readout: per-atom linear on
+the scalar block -> per-graph energy sum.  Equivariance is property-tested
+(tests/test_gnn_models.py::test_nequip_equivariance).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from repro.models.gnn import so3
+from repro.models.gnn.common import bessel_rbf, gather, mlp_apply, mlp_init, scatter_sum
+
+
+def _paths(l_max: int) -> List[Tuple[int, int, int]]:
+    out = []
+    for l1 in range(l_max + 1):
+        for l2 in range(l_max + 1):
+            for l3 in range(abs(l1 - l2), min(l1 + l2, l_max) + 1):
+                if np.abs(so3.clebsch_gordan_real(l1, l2, l3)).max() > 1e-12:
+                    out.append((l1, l2, l3))
+    return out
+
+
+def init(rng, cfg: GNNConfig, n_species: int) -> Tuple[Dict, Dict]:
+    C, L = cfg.d_hidden, cfg.l_max
+    paths = _paths(L)
+    keys = jax.random.split(rng, 3 + cfg.n_layers)
+    params: Dict = {
+        "embed": jax.random.normal(keys[0], (n_species, C), jnp.float32) / np.sqrt(n_species),
+    }
+    logical: Dict = {"embed": (None, None)}
+    layers, layers_log = [], []
+    for i in range(cfg.n_layers):
+        ks = jax.random.split(keys[2 + i], 4)
+        radial, radial_log = mlp_init(ks[0], (cfg.n_rbf, 32, len(paths) * C))
+        lin = {
+            f"l{l}": jax.random.normal(ks[1], (C, C), jnp.float32) / np.sqrt(C)
+            for l in range(L + 1)
+        }
+        gate = jax.random.normal(ks[2], (C, L * C), jnp.float32) / np.sqrt(C) if L else None
+        layer = {"radial": radial, "lin": lin}
+        layer_log = {"radial": radial_log,
+                     "lin": {k: (None, None) for k in lin}}
+        if gate is not None:
+            layer["gate"] = gate
+            layer_log["gate"] = (None, None)
+        layers.append(layer)
+        layers_log.append(layer_log)
+    params["layers"] = layers
+    logical["layers"] = layers_log
+    readout, readout_log = mlp_init(keys[1], (C, 16, 1))
+    params["readout"] = readout
+    logical["readout"] = readout_log
+    return params, logical
+
+
+def _interaction(lp, h, Y, rbf_w, src, dst, emask, cfg: GNNConfig):
+    """One tensor-product message-passing layer."""
+    n, C, _ = h.shape
+    L = cfg.l_max
+    paths = _paths(L)
+    w = mlp_apply(lp["radial"], rbf_w).reshape(-1, len(paths), C)  # (E, P, C)
+    h_src = gather(h, src)                                          # (E, C, S)
+    msg = jnp.zeros_like(h_src)
+    for pi, (l1, l2, l3) in enumerate(paths):
+        CG = jnp.asarray(so3.clebsch_gordan_real(l1, l2, l3), jnp.float32)
+        a = h_src[:, :, l1 * l1:(l1 + 1) ** 2]                      # (E, C, 2l1+1)
+        b = Y[:, l2 * l2:(l2 + 1) ** 2]                             # (E, 2l2+1)
+        out = jnp.einsum("ijk,eci,ej->eck", CG, a, b)               # (E, C, 2l3+1)
+        msg = msg.at[:, :, l3 * l3:(l3 + 1) ** 2].add(out * w[:, pi, :, None])
+    agg = scatter_sum(msg, dst, n, emask)
+
+    # self-interaction per l + gate nonlinearity
+    new = jnp.zeros_like(h)
+    for l in range(L + 1):
+        lo, hi = l * l, (l + 1) ** 2
+        mixed = jnp.einsum("cd,ncs->nds", lp["lin"][f"l{l}"], agg[:, :, lo:hi])
+        new = new.at[:, :, lo:hi].set(mixed)
+    scal = jax.nn.silu(new[:, :, 0])
+    out = new.at[:, :, 0].set(scal)
+    if L:
+        gates = jax.nn.sigmoid(scal @ lp["gate"]).reshape(n, L, C)  # (N, L, C)
+        for l in range(1, L + 1):
+            lo, hi = l * l, (l + 1) ** 2
+            out = out.at[:, :, lo:hi].multiply(gates[:, l - 1, :, None])
+    return h + out  # residual
+
+
+def forward(params, batch: Dict, cfg: GNNConfig, n_graphs: int) -> jnp.ndarray:
+    """Per-graph energy prediction (or per-node when graph_id is absent)."""
+    species = batch["node_feat"]                 # (N, n_species) one-hot-ish
+    pos = batch["positions"]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    emask, nmask = batch["edge_mask"], batch["node_mask"]
+    n = species.shape[0]
+    C, L = cfg.d_hidden, cfg.l_max
+
+    h = jnp.zeros((n, C, so3.n_sph(L)), jnp.float32)
+    h = h.at[:, :, 0].set(species @ params["embed"])
+
+    r = gather(pos, src) - gather(pos, dst)
+    dist = jnp.linalg.norm(r + 1e-9, axis=-1)
+    Y = so3.sph_harm(r, L)
+    rbf = bessel_rbf(dist, cfg.n_rbf, cfg.cutoff)
+    # zero out edges beyond the cutoff (masked edges too)
+    emask = emask & (dist < cfg.cutoff)
+
+    for lp in params["layers"]:
+        h = _interaction(lp, h, Y, rbf, src, dst, emask, cfg)
+        h = h * nmask[:, None, None]
+
+    atom_e = mlp_apply(params["readout"], h[:, :, 0])[:, 0] * nmask
+    gid = batch.get("graph_id")
+    if gid is not None:
+        return jax.ops.segment_sum(atom_e, gid, num_segments=n_graphs)
+    return atom_e
+
+
+def loss_fn(params, batch: Dict, cfg: GNNConfig, n_graphs: int):
+    pred = forward(params, batch, cfg, n_graphs)
+    target = batch["targets"].astype(jnp.float32)
+    loss = jnp.mean((pred - target) ** 2)
+    return loss, {"loss": loss, "mae": jnp.mean(jnp.abs(pred - target))}

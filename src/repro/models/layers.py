@@ -1,0 +1,181 @@
+"""Shared neural-net layers (pure functions over param pytrees).
+
+Params are dicts of jnp arrays; each initializer returns ``(params,
+logical_axes)`` where logical_axes mirrors the param tree with per-dim
+logical names consumed by repro.distributed.sharding.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _split(rng, n):
+    return jax.random.split(rng, n)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, d_in: int, d_out: int, dtype, axes=("fsdp", "model"),
+               bias: bool = False, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(rng, (d_in, d_out), dtype=jnp.float32) * scale
+    params = {"w": w.astype(dtype)}
+    logical = {"w": axes}
+    if bias:
+        params["b"] = jnp.zeros((d_out,), dtype=dtype)
+        logical["b"] = (axes[1],)
+    return params, logical
+
+
+def dense_apply(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def norm_init(d: int, dtype) -> Tuple[Dict, Dict]:
+    return {"scale": jnp.ones((d,), dtype=dtype)}, {"scale": (None,)}
+
+
+def rms_norm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def rms_norm_nd(scale, x, eps: float = 1e-6):
+    """RMS norm with an explicit scale array (e.g. per-head QK-norm)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, d_head); positions: broadcastable to (..., seq)."""
+    freqs = rope_frequencies(x.shape[-1], theta)              # (d/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, d/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blocked-softmax attention (memory-safe reference; the Pallas kernel in
+# repro.kernels.flash_attention is the TPU-optimised twin)
+# ---------------------------------------------------------------------------
+
+
+NEG_INF = -1e30
+
+
+def attention(
+    q: jnp.ndarray,            # (B, S_q, H, D)
+    k: jnp.ndarray,            # (B, S_kv, KV, D)
+    v: jnp.ndarray,            # (B, S_kv, KV, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    chunk: int = 1024,
+    kv_len: Optional[jnp.ndarray] = None,   # (B,) valid KV length (decode)
+    window_dynamic: Optional[jnp.ndarray] = None,  # scalar overriding window
+    unroll: bool = False,                    # unroll the KV-chunk scan
+) -> jnp.ndarray:
+    """Grouped-query attention with online-softmax over KV chunks.
+
+    Memory per step is O(S_q * chunk) instead of O(S_q * S_kv) — this is what
+    keeps 32k-token prefill lowerable without materialising the score matrix.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    scale = 1.0 / math.sqrt(D)
+
+    n_chunks = max(1, math.ceil(Skv / chunk))
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, KV, D)
+    vc = v.reshape(B, n_chunks, chunk, KV, D)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kb, vb, start = inputs
+        kv_pos = start + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        mask = kv_pos[None, :] <= (q_pos[:, None] if causal else jnp.inf)
+        if not causal:
+            mask = jnp.ones((Sq, chunk), dtype=bool)
+        w = window if window_dynamic is None else None
+        if w is not None:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - w)
+        if window_dynamic is not None:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window_dynamic)
+        valid = kv_pos < Skv
+        if kv_len is not None:
+            validb = kv_pos[None, :] < kv_len[:, None]        # (B, chunk)
+            maskb = mask[None, :, :] & validb[:, None, :]     # (B, Sq, chunk)
+            s = jnp.where(maskb[:, :, None, None, :], s, NEG_INF)
+        else:
+            maskb = mask & valid[None, :]
+            s = jnp.where(maskb[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p, vb.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KV, G), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), dtype=jnp.float32)
+    acc0 = jnp.zeros((B, Sq, KV, G, D), dtype=jnp.float32)
+    starts = jnp.arange(n_chunks) * chunk
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), starts),
+        unroll=n_chunks if unroll else 1,
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(gate) * up
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token cross-entropy in fp32 (logits (..., V), labels (...))."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

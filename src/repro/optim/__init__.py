@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamW, AdamWState
+from repro.optim.schedule import cosine_schedule
+
+__all__ = ["AdamW", "AdamWState", "cosine_schedule"]

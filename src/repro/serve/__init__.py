@@ -1,0 +1,3 @@
+from repro.serve.engine import GraphQueryEngine, ServeConfig
+
+__all__ = ["GraphQueryEngine", "ServeConfig"]

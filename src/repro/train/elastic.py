@@ -1,0 +1,54 @@
+"""Elastic scaling: reshard a checkpoint onto a different mesh.
+
+Checkpoints are mesh-agnostic (unsharded numpy + structure manifest), so
+scaling from N to M chips is: build the new mesh, resolve shardings from the
+same logical-axis rules, and ``restore(..., shardings=new)``.  The logical
+rules make this a pure re-layout — no model or optimizer surgery.
+
+``plan_reshard`` additionally reports the per-device byte movement the
+re-layout implies (useful to budget the scale-up pause).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.distributed.sharding import LogicalAxisRules, rules_for, tree_shardings
+from repro.train.checkpoint import CheckpointManager
+from repro.utils import get_logger
+
+log = get_logger("train.elastic")
+
+
+def reshard_restore(
+    ckpt: CheckpointManager,
+    like,
+    logical_tree,
+    new_mesh,
+    rules: Optional[LogicalAxisRules] = None,
+    step: Optional[int] = None,
+):
+    """Restore a checkpoint onto ``new_mesh`` (different size/topology)."""
+    shardings = tree_shardings(new_mesh, logical_tree, like, rules)
+    return ckpt.restore(like, step=step, shardings=shardings)
+
+
+def plan_reshard(like, logical_tree, old_mesh, new_mesh,
+                 rules_old=None, rules_new=None) -> Dict[str, Any]:
+    """Byte-movement estimate for an elastic transition."""
+    rules_old = rules_old or rules_for(old_mesh)
+    rules_new = rules_new or rules_for(new_mesh)
+    total_bytes = sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(like))
+    old_chips = int(old_mesh.devices.size)
+    new_chips = int(new_mesh.devices.size)
+    return {
+        "total_state_bytes": total_bytes,
+        "old_chips": old_chips,
+        "new_chips": new_chips,
+        "bytes_per_new_chip": total_bytes / max(new_chips, 1),
+        # worst case: every new chip pulls its full shard from elsewhere
+        "est_transfer_bytes": total_bytes,
+    }

@@ -1,0 +1,12 @@
+from repro.workload.sketch import FrequencySketch
+from repro.workload.stream import WorkloadStream, periodic_frequencies, linear_drift
+from repro.workload.executor import QueryExecutor, ipt_of_partition
+
+__all__ = [
+    "FrequencySketch",
+    "WorkloadStream",
+    "periodic_frequencies",
+    "linear_drift",
+    "QueryExecutor",
+    "ipt_of_partition",
+]

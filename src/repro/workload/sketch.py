@@ -1,0 +1,51 @@
+"""Query-frequency tracking over a sliding window (paper §5.3: "frequencies
+are approximated using a sketch datastructure which samples the occurrences
+of each query within a sliding window of time t").
+
+We use an exponential-decay counter — O(#distinct queries) space, constant
+time per observation, and the decay horizon plays the role of the window."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+from repro.core.rpq import RPQ
+
+
+@dataclass
+class FrequencySketch:
+    """Exponentially decayed query counts -> relative frequencies."""
+
+    half_life: float = 100.0           # observations until weight halves
+    counts: Dict[str, float] = field(default_factory=dict)
+    queries: Dict[str, RPQ] = field(default_factory=dict)
+    _ticks: int = 0
+
+    @property
+    def decay(self) -> float:
+        return 0.5 ** (1.0 / self.half_life)
+
+    def observe(self, q: RPQ, weight: float = 1.0) -> None:
+        d = self.decay
+        for k in self.counts:
+            self.counts[k] *= d
+        qh = q.qhash
+        self.counts[qh] = self.counts.get(qh, 0.0) + weight
+        self.queries[qh] = q
+        self._ticks += 1
+
+    def observe_batch(self, batch) -> None:
+        for q in batch:
+            self.observe(q)
+
+    def frequencies(self, min_freq: float = 1e-4) -> Dict[str, float]:
+        total = sum(self.counts.values())
+        if total <= 0:
+            return {}
+        out = {k: v / total for k, v in self.counts.items()}
+        return {k: (v if v >= min_freq else 0.0) for k, v in out.items()}
+
+    def workload(self, min_freq: float = 1e-4):
+        """[(RPQ, freq)] snapshot for TAPER invocation."""
+        freqs = self.frequencies(min_freq)
+        return [(self.queries[k], f) for k, f in freqs.items() if f > 0]

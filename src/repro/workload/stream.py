@@ -1,0 +1,66 @@
+"""Query workload streams with drifting frequencies (paper §6.1.2).
+
+The paper's experiments use a periodic model where each query pattern's
+frequency grows and shrinks "similar to a sin wave", complementary so the
+total is always 1; plus (Fig. 10) a linear drift between two queries."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.rpq import RPQ
+
+
+def periodic_frequencies(
+    n_queries: int, t: float, period: float = 1.0, floor: float = 0.02
+) -> np.ndarray:
+    """Relative frequencies at time ``t``: phase-shifted raised sines,
+    normalised to sum to 1 (paper §6.1.2)."""
+    phases = 2 * np.pi * (np.arange(n_queries) / n_queries)
+    raw = 1.0 + np.sin(2 * np.pi * t / period + phases)
+    raw = np.maximum(raw, floor)
+    return raw / raw.sum()
+
+
+def linear_drift(t: float) -> np.ndarray:
+    """Fig. 10 model: two queries, Q_a 100%->0% linearly, Q_b 0%->100%."""
+    a = float(np.clip(1.0 - t, 0.0, 1.0))
+    return np.array([a, 1.0 - a])
+
+
+@dataclass
+class WorkloadStream:
+    """Infinite stream of query instances with time-varying frequencies."""
+
+    queries: Sequence[RPQ]
+    period: float = 1.0
+    mode: str = "periodic"            # "periodic" | "linear" | "static"
+    static_freqs: Sequence[float] = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self.t = 0.0
+
+    def frequencies(self) -> np.ndarray:
+        if self.mode == "periodic":
+            return periodic_frequencies(len(self.queries), self.t, self.period)
+        if self.mode == "linear":
+            assert len(self.queries) == 2
+            return linear_drift(self.t)
+        freqs = np.asarray(self.static_freqs, dtype=np.float64)
+        return freqs / freqs.sum()
+
+    def workload(self) -> List[Tuple[RPQ, float]]:
+        """Exact current workload snapshot [(query, frequency)]."""
+        return list(zip(self.queries, self.frequencies().tolist()))
+
+    def sample(self, batch_size: int) -> List[RPQ]:
+        """Sample a batch of query instances at the current time."""
+        idx = self._rng.choice(len(self.queries), size=batch_size, p=self.frequencies())
+        return [self.queries[i] for i in idx]
+
+    def advance(self, dt: float) -> None:
+        self.t += dt

@@ -1,0 +1,42 @@
+import os
+import sys
+
+# Smoke tests and benches must see exactly 1 CPU device (the dry-run sets its
+# own 512-device flag in its first two lines, in a separate process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def paper_graph():
+    from repro.graphs.generators import paper_example_graph
+
+    return paper_example_graph()
+
+
+@pytest.fixture(scope="session")
+def paper_workload():
+    from repro.core.rpq import parse_rpq
+
+    q1 = parse_rpq("a.(b|c).(c|d)")
+    q2 = parse_rpq("(c|a).c.a")
+    return [(q1, 0.5), (q2, 0.5)]
+
+
+@pytest.fixture(scope="session")
+def paper_trie(paper_graph, paper_workload):
+    from repro.core.tpstry import TPSTry
+
+    trie = TPSTry.from_workload(paper_workload)
+    return trie
+
+
+@pytest.fixture(scope="session")
+def paper_partition():
+    from repro.graphs.generators import paper_example_partition
+
+    return paper_example_partition()

@@ -1,0 +1,42 @@
+"""Cell-plan construction smoke: every (arch x shape) build plan resolves
+specs/shardings on a local mesh (the 512-device compile matrix itself is
+exercised by launch/dryrun.py; this guards the plan-building layer in CI)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import list_archs, shapes_for
+from repro.launch.mesh import make_smoke_mesh
+from repro.launch.specs import all_cells, build_cell
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_smoke_mesh()
+
+
+@pytest.mark.parametrize("arch,shape", all_cells())
+def test_build_cell(arch, shape, mesh):
+    plan = build_cell(arch, shape, mesh)
+    assert plan.step_fn is not None
+    assert plan.meta.get("model_flops", 0) > 0
+    # args and shardings are structurally consistent
+    flat_args = jax.tree.leaves(plan.args)
+    assert all(isinstance(a, jax.ShapeDtypeStruct) for a in flat_args)
+    flat_shard = jax.tree.leaves(
+        plan.in_shardings,
+        is_leaf=lambda x: hasattr(x, "spec"))
+    assert len(flat_shard) >= 1
+
+
+def test_all_cells_count():
+    cells = all_cells()
+    # 5 LM archs (4 shapes each, minus 4 long_500k skips) + 4 GNN x 4
+    # + dlrm x 4 + taper_paper x 1 = 16 + 16 + 4 + 1 = 37
+    assert len(cells) == 37
+
+
+def test_long_context_only_for_hybrid():
+    assert ("gemma3-4b", "long_500k") in all_cells()
+    for arch in ("qwen2.5-14b", "qwen3-4b", "olmoe-1b-7b", "kimi-k2-1t-a32b"):
+        assert (arch, "long_500k") not in all_cells()

@@ -1,0 +1,129 @@
+"""GNN model property tests: E(3)/SO(3) equivariance end-to-end, permutation
+invariance, sampler correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, shapes_for
+from repro.data.graphs import NeighborSampler, build_csr, random_graph_batch
+from repro.models.gnn import api as gnn_api
+from repro.models.gnn import equiformer, nequip
+
+RNG = np.random.default_rng(3)
+
+
+def _mol_batch(cfg, n_nodes=12, n_edges=40, seed=0):
+    rng = np.random.default_rng(seed)
+    d = gnn_api.N_SPECIES
+    feat = np.zeros((n_nodes, d), np.float32)
+    feat[np.arange(n_nodes), rng.integers(0, d, n_nodes)] = 1.0
+    src = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    dst = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    pos = rng.normal(size=(n_nodes, 3)).astype(np.float32)
+    return {
+        "node_feat": jnp.asarray(feat),
+        "edge_src": jnp.asarray(src),
+        "edge_dst": jnp.asarray(dst),
+        "node_mask": jnp.ones(n_nodes, bool),
+        "edge_mask": jnp.asarray(src != dst),
+        "positions": jnp.asarray(pos),
+        "graph_id": jnp.zeros(n_nodes, jnp.int32),
+        "targets": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def _random_rot():
+    a = RNG.uniform(-np.pi, np.pi)
+    b = RNG.uniform(0, np.pi)
+    g = RNG.uniform(-np.pi, np.pi)
+    ca, sa, cb, sb, cg, sg = np.cos(a), np.sin(a), np.cos(b), np.sin(b), np.cos(g), np.sin(g)
+    Rz1 = np.array([[ca, -sa, 0], [sa, ca, 0], [0, 0, 1]])
+    Ry = np.array([[cb, 0, sb], [0, 1, 0], [-sb, 0, cb]])
+    Rz2 = np.array([[cg, -sg, 0], [sg, cg, 0], [0, 0, 1]])
+    return (Rz1 @ Ry @ Rz2).astype(np.float32)
+
+
+@pytest.mark.parametrize("model,arch", [(nequip, "nequip"),
+                                        (equiformer, "equiformer-v2")])
+def test_energy_invariance_under_rotation_translation(model, arch):
+    """Predicted energies must be invariant to global rotation+translation —
+    the defining property of both assigned equivariant architectures."""
+    cfg = get_config(arch).reduced()
+    batch = _mol_batch(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg, gnn_api.N_SPECIES)
+    e0 = model.forward(params, batch, cfg, 1)
+
+    R = jnp.asarray(_random_rot())
+    t = jnp.asarray(RNG.normal(size=(1, 3)).astype(np.float32))
+    batch_rot = dict(batch)
+    batch_rot["positions"] = batch["positions"] @ R.T + t
+    e1 = model.forward(params, batch_rot, cfg, 1)
+    np.testing.assert_allclose(np.asarray(e0), np.asarray(e1), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("model,arch", [(nequip, "nequip"),
+                                        (equiformer, "equiformer-v2")])
+def test_energy_changes_with_geometry(model, arch):
+    """Sanity: the model is not constant — perturbing geometry changes E."""
+    cfg = get_config(arch).reduced()
+    batch = _mol_batch(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0), cfg, gnn_api.N_SPECIES)
+    e0 = model.forward(params, batch, cfg, 1)
+    batch2 = dict(batch)
+    batch2["positions"] = batch["positions"] * 1.3
+    e1 = model.forward(params, batch2, cfg, 1)
+    assert abs(float(e0[0]) - float(e1[0])) > 1e-6
+
+
+def test_gcn_permutation_equivariance():
+    from repro.models.gnn import gcn
+
+    cfg = get_config("gcn-cora").reduced()
+    shape = shapes_for("gcn-cora")[0]
+    b = random_graph_batch(cfg, shape, seed=1, scale=0.05)
+    batch = {k: jnp.asarray(v) for k, v in b.items()}
+    params, _ = gcn.init(jax.random.PRNGKey(0), cfg, b["node_feat"].shape[1])
+    out = gcn.forward(params, batch, cfg)
+
+    n = b["node_feat"].shape[0]
+    perm = RNG.permutation(n)
+    inv = np.argsort(perm)
+    pb = dict(batch)
+    pb["node_feat"] = batch["node_feat"][perm]
+    pb["node_mask"] = batch["node_mask"][perm]
+    pb["edge_src"] = jnp.asarray(inv)[batch["edge_src"]]
+    pb["edge_dst"] = jnp.asarray(inv)[batch["edge_dst"]]
+    out_p = gcn.forward(params, pb, cfg)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out)[perm],
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_neighbor_sampler_shapes_and_validity():
+    g = build_csr(5000, 80000, seed=0)
+    sampler = NeighborSampler(g, (15, 10))
+    rng = np.random.default_rng(0)
+    seeds = rng.integers(0, g.n, 64)
+    sub = sampler.sample(seeds, rng)
+    assert len(sub.nodes) == sampler.max_nodes(64) == 64 * (1 + 15 + 15 * 10)
+    assert sub.edge_src.shape == sub.edge_dst.shape
+    # all masked edges reference valid local nodes
+    n_valid = int(sub.node_mask.sum())
+    assert sub.edge_src[sub.edge_mask].max() < n_valid
+    assert sub.edge_dst[sub.edge_mask].max() < n_valid
+    # every sampled edge exists in the base graph
+    for s, d in zip(sub.edge_src[sub.edge_mask][:100], sub.edge_dst[sub.edge_mask][:100]):
+        u, w = sub.nodes[s], sub.nodes[d]
+        row = g.col[g.row_ptr[w]: g.row_ptr[w + 1]]
+        assert u in row
+
+
+def test_sampler_respects_fanout_distribution():
+    g = build_csr(2000, 60000, seed=1)
+    sampler = NeighborSampler(g, (5,))
+    rng = np.random.default_rng(1)
+    sub = sampler.sample(np.arange(32), rng)
+    # seeds with degree > 0 contribute exactly fanout edges
+    deg = g.row_ptr[1:] - g.row_ptr[:-1]
+    expect = sum(5 for s in range(32) if deg[s] > 0)
+    assert int(sub.edge_mask.sum()) == expect

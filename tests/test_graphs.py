@@ -1,0 +1,77 @@
+"""Graph container, generators and partitioner tests."""
+import numpy as np
+import pytest
+
+from repro.graphs.generators import (
+    musicbrainz_like,
+    paper_example_graph,
+    power_law_labelled,
+    provgen_like,
+)
+from repro.graphs.metrics import edge_cut, partition_balance, partition_sizes
+from repro.graphs.partition import (
+    fennel_stream_partition,
+    hash_partition,
+    metis_like_partition,
+)
+
+
+def test_paper_graph_structure(paper_graph):
+    g = paper_graph
+    assert g.n == 6
+    assert g.undirected_edge_count() == 8
+    assert sorted(g.neighbors(1).tolist()) == [0, 2, 3, 4]   # §4.2: nbrs of v2
+    assert sorted(g.neighbors(2).tolist()) == [1, 3, 4, 5]   # §5.4: nbrs of v3
+    assert g.neighbors(5).tolist() == [2]                    # v6 - v3 only
+    cnt = g.neighbor_label_counts()
+    assert cnt[4, 2] == 1  # v5 has exactly one c-neighbour (v3)
+    assert cnt[5, 2] == 1  # v6 has exactly one c-neighbour (v3)
+    assert g.label_counts().tolist() == [2, 1, 2, 1]
+
+
+def test_generators_valid():
+    for g in (musicbrainz_like(2000, seed=1), provgen_like(2000, seed=1),
+              power_law_labelled(1000, seed=1)):
+        g.validate()
+        assert g.n >= 1000
+        assert g.m > 0
+        # symmetric edge list
+        fwd = set(zip(g.src.tolist(), g.dst.tolist()))
+        assert all((d, s) in fwd for s, d in list(fwd)[:200])
+
+
+def test_generator_heterogeneity():
+    g = musicbrainz_like(5000, seed=0)
+    assert g.n_labels == 12
+    assert (g.label_counts() > 0).all()
+    g2 = provgen_like(5000, seed=0)
+    assert g2.n_labels == 3
+
+
+def test_hash_partition_balanced():
+    part = hash_partition(10_000, 8, seed=3)
+    assert part.shape == (10_000,)
+    assert partition_balance(part, 8) < 1.05
+    assert set(np.unique(part)) == set(range(8))
+
+
+def test_metis_like_beats_hash():
+    g = provgen_like(3000, seed=2)
+    hash_p = hash_partition(g.n, 8)
+    metis_p = metis_like_partition(g, 8, seed=0)
+    assert partition_balance(metis_p, 8) <= 1.06
+    assert edge_cut(g, metis_p) < 0.7 * edge_cut(g, hash_p)
+
+
+def test_fennel_beats_hash():
+    g = provgen_like(3000, seed=2)
+    hash_p = hash_partition(g.n, 8)
+    fennel_p = fennel_stream_partition(g, 8, seed=0)
+    assert partition_balance(fennel_p, 8) <= 1.15
+    assert edge_cut(g, fennel_p) < edge_cut(g, hash_p)
+
+
+def test_subgraph_mask(paper_graph):
+    sub = paper_graph.subgraph_mask(np.array([0, 0, 1, 0, 1, 1], dtype=bool))
+    assert sub.n == 3
+    assert sub.undirected_edge_count() == 2  # 3-5, 3-6

@@ -1,0 +1,142 @@
+"""Hypothesis property tests for TAPER core invariants."""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.rpq import RPQ, concat, label, parse_rpq, star, union
+from repro.core.swap import SwapConfig, swap_iteration
+from repro.core.tpstry import TPSTry
+from repro.core.visitor import extroversion_field
+from repro.graphs.generators import power_law_labelled
+from repro.graphs.partition import hash_partition
+from repro.workload.executor import QueryExecutor
+
+SET = settings(
+    max_examples=20,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+LABELS = ["L0", "L1", "L2", "L3"]
+
+
+@st.composite
+def rpq_expr(draw, depth=0):
+    if depth >= 2:
+        return label(draw(st.sampled_from(LABELS)))
+    kind = draw(st.sampled_from(["label", "concat", "union", "star"]))
+    if kind == "label":
+        return label(draw(st.sampled_from(LABELS)))
+    if kind == "star":
+        return star(draw(rpq_expr(depth + 1)))
+    a = draw(rpq_expr(depth + 1))
+    b = draw(rpq_expr(depth + 1))
+    return concat(a, b) if kind == "concat" else union(a, b)
+
+
+@st.composite
+def graph_workload(draw):
+    n = draw(st.integers(30, 300))
+    seed = draw(st.integers(0, 2**16))
+    g = power_law_labelled(n, n_labels=4, avg_degree=5.0, seed=seed)
+    n_q = draw(st.integers(1, 3))
+    queries = [draw(rpq_expr()) for _ in range(n_q)]
+    freqs = [draw(st.floats(0.1, 1.0)) for _ in range(n_q)]
+    k = draw(st.integers(2, 5))
+    return g, list(zip(queries, freqs)), k, seed
+
+
+def _trie_or_none(workload):
+    try:
+        return TPSTry.from_workload(workload, max_len=4)
+    except ValueError:
+        return None  # all queries expanded empty — fine
+
+
+@given(graph_workload())
+@SET
+def test_extroversion_bounds_and_decomposition(gwk):
+    g, workload, k, seed = gwk
+    trie = _trie_or_none(workload)
+    if trie is None:
+        return
+    arrays = trie.compile(g.label_names)
+    part = hash_partition(g.n, k, seed)
+    fld = extroversion_field(g, arrays, part, k)
+
+    assert np.isfinite(fld.extroversion).all()
+    assert (fld.extroversion >= -1e-6).all()
+    assert (fld.extroversion <= 1.0 + 1e-5).all()
+    assert (fld.pr >= -1e-7).all()
+    assert (fld.edge_mass >= -1e-7).all()
+    # per-destination decomposition sums to total external mass
+    np.testing.assert_allclose(
+        fld.ext_to.sum(axis=1), fld.extro_mass, rtol=1e-4, atol=1e-6
+    )
+    # out-flowing mass never exceeds the probability of being at the vertex
+    out_mass = np.zeros(g.n)
+    np.add.at(out_mass, g.src, fld.edge_mass)
+    assert (out_mass <= fld.pr * (1 + 1e-4) + 1e-6).all()
+
+
+@given(graph_workload())
+@SET
+def test_single_partition_has_no_extroversion(gwk):
+    g, workload, k, seed = gwk
+    trie = _trie_or_none(workload)
+    if trie is None:
+        return
+    arrays = trie.compile(g.label_names)
+    part = np.zeros(g.n, dtype=np.int32)
+    fld = extroversion_field(g, arrays, part, 1)
+    np.testing.assert_allclose(fld.extro_mass, 0.0, atol=1e-7)
+
+
+@given(graph_workload())
+@SET
+def test_swap_iteration_invariants(gwk):
+    g, workload, k, seed = gwk
+    trie = _trie_or_none(workload)
+    if trie is None:
+        return
+    arrays = trie.compile(g.label_names)
+    part = hash_partition(g.n, k, seed)
+    fld = extroversion_field(g, arrays, part, k)
+    cfg = SwapConfig(balance_eps=0.2)  # loose for tiny graphs
+    rng = np.random.default_rng(0)
+    new_part, stats = swap_iteration(g, part, fld, k, cfg, rng)
+    # validity
+    assert new_part.shape == part.shape
+    assert new_part.min() >= 0 and new_part.max() < k
+    assert stats.moves == int((new_part != part).sum())
+
+
+@given(graph_workload())
+@SET
+def test_ipt_bounded_by_total_traversals(gwk):
+    g, workload, k, seed = gwk
+    ex = QueryExecutor(g, max_len=4)
+    part = hash_partition(g.n, k, seed)
+    for q, f in workload:
+        try:
+            total = ex.total_traversals(q)
+        except ValueError:
+            continue
+        ipt = ex.ipt(q, part)
+        assert 0.0 <= ipt <= total + 1e-6
+        assert ex.ipt(q, np.zeros(g.n, dtype=np.int32)) == 0.0
+
+
+@given(rpq_expr())
+@SET
+def test_trie_probability_monotone(q):
+    try:
+        trie = TPSTry.from_workload([(q, 1.0)], max_len=4)
+    except ValueError:
+        return
+    for node in trie.nodes:
+        p_self = node.p if node.node_id != 0 else 1.0
+        kids = sum(trie.nodes[c].p for c in node.children.values())
+        assert kids <= p_self + 1e-9
+        for c in node.children.values():
+            assert trie.nodes[c].p <= p_self + 1e-9

@@ -1,0 +1,65 @@
+"""RPQ expression language tests (paper §2, §4)."""
+import pytest
+
+from repro.core.rpq import concat, label, parse_rpq, star, union
+
+
+def test_parse_roundtrip():
+    q = parse_rpq("a.(b|c).(c|d)")
+    assert q.op == "concat"
+    assert q.to_text() == "a.(b|c).(c|d)"
+
+
+def test_strings_expansion_paper_q1():
+    # str(a.(b|c).(c|d)) = {abc, abd, acc, acd}   (paper §4 example)
+    q = parse_rpq("a.(b|c).(c|d)")
+    got = {"".join(s) for s in q.strings(max_len=5)}
+    assert got == {"abc", "abd", "acc", "acd"}
+
+
+def test_strings_expansion_paper_q2():
+    q = parse_rpq("(c|a).c.a")
+    got = {"".join(s) for s in q.strings(max_len=5)}
+    assert got == {"cca", "aca"}
+
+
+def test_union_plus_equivalent():
+    assert parse_rpq("a+b").strings(3) == parse_rpq("a|b").strings(3)
+
+
+def test_star_bounded_expansion():
+    # str(e*) bounded by star_max and max_len (paper §4: e^N expansion)
+    q = parse_rpq("Entity.(Entity)*.Activity")
+    got = {"".join(f"{sym[0]}" for sym in s) for s in q.strings(max_len=4, star_max=3)}
+    # E A, E E A, E E E A  (strings longer than max_len dropped)
+    assert got == {"EA", "EEA", "EEEA"}
+
+
+def test_star_zero_reps_allowed():
+    q = parse_rpq("a.(b)*")
+    got = {"".join(s) for s in q.strings(max_len=3)}
+    assert "a" in got and "ab" in got and "abb" in got
+
+
+def test_qhash_unique_and_stable():
+    q1, q2 = parse_rpq("a.b"), parse_rpq("a.c")
+    assert q1.qhash != q2.qhash
+    assert q1.qhash == parse_rpq("a.b").qhash
+
+
+def test_operator_sugar():
+    q = label("a") * (label("b") | label("c"))
+    assert {"".join(s) for s in q.strings(3)} == {"ab", "ac"}
+
+
+def test_parse_errors():
+    with pytest.raises(ValueError):
+        parse_rpq("a..b")
+    with pytest.raises(ValueError):
+        parse_rpq("(a.b")
+    with pytest.raises(ValueError):
+        parse_rpq("a.b)")
+
+
+def test_middle_dot_accepted():
+    assert parse_rpq("a·b").to_text() == "a.b"

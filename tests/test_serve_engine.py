@@ -1,0 +1,53 @@
+"""Online serving engine tests: batched requests, drift-triggered TAPER."""
+import numpy as np
+import pytest
+
+from repro.core.rpq import parse_rpq
+from repro.graphs.generators import provgen_like
+from repro.graphs.partition import hash_partition
+from repro.serve.engine import GraphQueryEngine, ServeConfig
+from repro.workload.stream import WorkloadStream
+
+
+@pytest.fixture(scope="module")
+def engine():
+    g = provgen_like(2000, seed=4)
+    return GraphQueryEngine(
+        g, hash_partition(g.n, 4, seed=1), 4,
+        ServeConfig(min_requests_between_invocations=50, drift_threshold=0.2,
+                    max_results_per_query=8),
+    )
+
+
+def test_serve_batch_returns_results(engine):
+    q = parse_rpq("Entity.Activity")
+    out = engine.serve_batch([q, q, q])
+    assert len(out) == 3
+    for r in out:
+        assert r.n_results >= 0
+        assert r.ipt >= 0
+        assert r.latency_s >= 0
+
+
+def test_drift_triggers_invocation(engine):
+    qa = parse_rpq("Entity.Entity")
+    qb = parse_rpq("Agent.Activity")
+    # phase 1: all Qa -> first fit
+    for _ in range(3):
+        engine.serve_batch([qa] * 30)
+    inv1 = engine.invocations
+    assert inv1 >= 1
+    part1 = engine.part.copy()
+    # phase 2: workload flips to Qb -> drift must trigger a re-fit
+    for _ in range(4):
+        engine.serve_batch([qb] * 30)
+    assert engine.invocations > inv1
+    assert (engine.part != part1).any()
+    # partition stays valid
+    assert engine.part.min() >= 0 and engine.part.max() < 4
+
+
+def test_stats_accounting(engine):
+    s = engine.stats()
+    assert s["requests"] > 0
+    assert s["ipt_per_request"] >= 0

@@ -1,0 +1,124 @@
+"""Equivariance property tests for the SO(3) machinery.
+
+The key identities:
+  Y(R r) = D(R) Y(r)                       (sph_harm x wigner_d_real)
+  CG contraction transforms as l3          (clebsch_gordan_real)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.gnn import so3
+
+RNG = np.random.default_rng(0)
+
+
+def random_rotation(n):
+    """Random z-y-z Euler angles."""
+    alpha = RNG.uniform(-np.pi, np.pi, n)
+    beta = RNG.uniform(0, np.pi, n)
+    gamma = RNG.uniform(-np.pi, np.pi, n)
+    return jnp.asarray(alpha), jnp.asarray(beta), jnp.asarray(gamma)
+
+
+def rot_matrix(alpha, beta, gamma):
+    ca, sa = jnp.cos(alpha), jnp.sin(alpha)
+    cb, sb = jnp.cos(beta), jnp.sin(beta)
+    cg, sg = jnp.cos(gamma), jnp.sin(gamma)
+    Rz1 = jnp.stack([jnp.stack([ca, -sa, 0 * ca], -1),
+                     jnp.stack([sa, ca, 0 * ca], -1),
+                     jnp.stack([0 * ca, 0 * ca, 1 + 0 * ca], -1)], -2)
+    Ry = jnp.stack([jnp.stack([cb, 0 * cb, sb], -1),
+                    jnp.stack([0 * cb, 1 + 0 * cb, 0 * cb], -1),
+                    jnp.stack([-sb, 0 * cb, cb], -1)], -2)
+    Rz2 = jnp.stack([jnp.stack([cg, -sg, 0 * cg], -1),
+                     jnp.stack([sg, cg, 0 * cg], -1),
+                     jnp.stack([0 * cg, 0 * cg, 1 + 0 * cg], -1)], -2)
+    return Rz1 @ Ry @ Rz2
+
+
+def test_sph_harm_l0_l1_closed_form():
+    v = jnp.asarray(RNG.normal(size=(64, 3)))
+    v = v / jnp.linalg.norm(v, axis=-1, keepdims=True)
+    Y = so3.sph_harm(v, 1)
+    c0 = 1.0 / np.sqrt(4 * np.pi)
+    c1 = np.sqrt(3.0 / (4 * np.pi))
+    np.testing.assert_allclose(Y[:, 0], c0, rtol=1e-5)
+    # ordering: (l=1, m=-1)=y, (m=0)=z, (m=1)=x
+    np.testing.assert_allclose(Y[:, 1], c1 * v[:, 1], rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(Y[:, 2], c1 * v[:, 2], rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(Y[:, 3], c1 * v[:, 0], rtol=2e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("l_max", [1, 2, 3, 6])
+def test_wigner_rotation_identity(l_max):
+    """Y(R r) == D(R) Y(r) for random rotations and directions."""
+    n = 16
+    a, b, g = random_rotation(n)
+    R = rot_matrix(a, b, g)
+    v = jnp.asarray(RNG.normal(size=(n, 3)))
+    v = v / jnp.linalg.norm(v, axis=-1, keepdims=True)
+    Rv = jnp.einsum("nij,nj->ni", R, v)
+    Y = so3.sph_harm(v, l_max)
+    YR = so3.sph_harm(Rv, l_max)
+    for l in range(l_max + 1):
+        D = so3.wigner_d_real(a, b, g, l)
+        lo, hi = l * l, (l + 1) ** 2
+        got = jnp.einsum("nij,nj->ni", D, Y[:, lo:hi])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(YR[:, lo:hi]),
+                                   rtol=1e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("l_max", [2, 4, 6])
+def test_wigner_orthogonality(l_max):
+    n = 8
+    a, b, g = random_rotation(n)
+    for l in range(l_max + 1):
+        D = so3.wigner_d_real(a, b, g, l)
+        eye = jnp.einsum("nij,nkj->nik", D, D)
+        np.testing.assert_allclose(
+            np.asarray(eye), np.broadcast_to(np.eye(2 * l + 1), eye.shape),
+            atol=2e-4,
+        )
+
+
+def test_align_to_z():
+    v = jnp.asarray(RNG.normal(size=(32, 3)))
+    v = v / jnp.linalg.norm(v, axis=-1, keepdims=True)
+    a, b, g = so3.align_to_z_angles(v)
+    R = rot_matrix(a, b, g)
+    z = jnp.einsum("nij,nj->ni", R, v)
+    np.testing.assert_allclose(np.asarray(z[:, 2]), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(z[:, :2]), 0.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("l1,l2,l3", [(1, 1, 0), (1, 1, 1), (1, 1, 2), (2, 1, 1), (2, 2, 2)])
+def test_cg_equivariance(l1, l2, l3):
+    """(D1 a) x (D2 b) contracted with CG transforms as D3."""
+    C = jnp.asarray(so3.clebsch_gordan_real(l1, l2, l3))
+    assert float(jnp.abs(C).max()) > 0  # non-trivial path
+    n = 8
+    a_, b_, g_ = random_rotation(n)
+    D1 = so3.wigner_d_real(a_, b_, g_, l1)
+    D2 = so3.wigner_d_real(a_, b_, g_, l2)
+    D3 = so3.wigner_d_real(a_, b_, g_, l3)
+    x = jnp.asarray(RNG.normal(size=(n, 2 * l1 + 1)))
+    y = jnp.asarray(RNG.normal(size=(n, 2 * l2 + 1)))
+    lhs = jnp.einsum("ijk,ni,nj->nk",
+                     C,
+                     jnp.einsum("nij,nj->ni", D1, x),
+                     jnp.einsum("nij,nj->ni", D2, y))
+    rhs = jnp.einsum("nij,nj->ni", D3, jnp.einsum("ijk,ni,nj->nk", C, x, y))
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-3, atol=2e-4)
+
+
+def test_rotate_coeffs_roundtrip():
+    l_max = 3
+    n, c = 10, 4
+    a, b, g = random_rotation(n)
+    Ds = so3.rotation_block_diag(a, b, g, l_max)
+    x = jnp.asarray(RNG.normal(size=(n, c, so3.n_sph(l_max))).astype(np.float32))
+    y = so3.rotate_coeffs(x, Ds, l_max)
+    back = so3.rotate_coeffs(y, Ds, l_max, transpose=True)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-4)

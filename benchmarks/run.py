@@ -18,6 +18,7 @@ def main() -> None:
         fig9_queries,
         fig10_drift,
         fig11_online,
+        swap_scale,
     )
 
     modules = [
@@ -26,6 +27,7 @@ def main() -> None:
         ("fig9_queries", fig9_queries),
         ("fig10_drift", fig10_drift),
         ("fig11_online", fig11_online),
+        ("swap_scale", swap_scale),
     ]
     # integration benchmarks (registered lazily; require the model substrate)
     try:

@@ -1,4 +1,4 @@
-"""Vertex swapping (paper §3.1, §5.5).
+"""Vertex swapping (paper §3.1, §5.5) — frontier-batched numpy engine.
 
 Per TAPER internal iteration:
 
@@ -15,13 +15,26 @@ Per TAPER internal iteration:
    enforced (paper §6.2.1).
 
 All probability masses come precomputed from the extroversion field (the jit
-DP); this module is pure host-side orchestration over small candidate sets —
-mirroring the role of the per-partition driver in the paper's architecture.
+DP).  The seed implementation walked each family one neighbour at a time with
+an ``np.searchsorted`` reverse-edge lookup per neighbour pair; this version
+keeps the offer/receive semantics and balance constraint bit-identical (see
+``repro.core.swap_ref`` + tests/test_swap_parity.py) but does all per-family
+work as whole-frontier array operations:
+
+* family expansion expands an entire BFS frontier per step — one
+  concatenated CSR slice, one gather of the cached
+  ``LabelledGraph.reverse_edge_index``, one first-occurrence dedup;
+* family gain/loss is a single masked segment-sum (``np.bincount``) over the
+  family's incident edge set, yielding the gains toward *all* ``k``
+  destinations at once (the seed recomputed a Python loop per destination).
+
+Internal iterations are therefore "inexpensive" in the paper's sense (§5):
+per-candidate cost is a handful of O(family-degree) vector ops.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -53,18 +66,39 @@ class SwapStats:
     candidates: int
 
 
-def _edge_indices_from(g: LabelledGraph, u: int) -> Tuple[np.ndarray, np.ndarray]:
-    lo, hi = g.row_ptr[u], g.row_ptr[u + 1]
-    return np.arange(lo, hi, dtype=np.int64), g.dst[lo:hi]
+def _concat_csr_edges(
+    g: LabelledGraph, vs: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Concatenated CSR edge indices of ``vs`` — each vertex's edges in CSR
+    order, vertices in the given order — plus the per-vertex edge counts."""
+    starts = g.row_ptr[vs]
+    cnts = g.row_ptr[vs + 1] - starts
+    total = int(cnts.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64), cnts
+    offs = np.repeat(starts - (np.cumsum(cnts) - cnts), cnts)
+    return offs + np.arange(total, dtype=np.int64), cnts
 
 
-def _edge_index(g: LabelledGraph, u: int, w: int) -> Optional[int]:
-    """Index of directed edge (u, w) in the CSR-sorted edge list, or None."""
-    lo, hi = g.row_ptr[u], g.row_ptr[u + 1]
-    j = np.searchsorted(g.dst[lo:hi], w)
-    if j < hi - lo and g.dst[lo + j] == w:
-        return int(lo + j)
-    return None
+def _frontier_edge_indices(
+    g: LabelledGraph, frontier: np.ndarray, rel_mass_out: np.ndarray, cap: int
+) -> np.ndarray:
+    """Concatenated CSR edge indices of every frontier vertex, in frontier
+    order (each vertex's edges in CSR order).  Vertices whose degree exceeds
+    ``cap`` keep only their ``cap`` highest-``rel_mass_out`` edges — the same
+    hub guard (and the same tie-breaking ``argsort`` call) as the seed."""
+    starts = g.row_ptr[frontier]
+    cnts = g.row_ptr[frontier + 1] - starts
+    if not (cnts > cap).any():
+        return _concat_csr_edges(g, frontier)[0]
+    chunks: List[np.ndarray] = []
+    for lo, c in zip(starts, cnts):
+        eidx = np.arange(lo, lo + c, dtype=np.int64)
+        if c > cap:
+            keep = np.argsort(-rel_mass_out[eidx])[:cap]
+            eidx = eidx[keep]
+        chunks.append(eidx)
+    return np.concatenate(chunks)
 
 
 def _family_of(
@@ -73,97 +107,86 @@ def _family_of(
     part: np.ndarray,
     moved: np.ndarray,
     rel_mass_out: np.ndarray,
+    rev: np.ndarray,
     cfg: SwapConfig,
-) -> List[int]:
+) -> np.ndarray:
     """Flood-fill family: local vertices likely (> threshold) to traverse
     *to* a current member (paper §5.5).  rel_mass_out[e] = edge_mass[e] /
-    Pr(src[e]) — the probability that a traversal out of src follows e."""
+    Pr(src[e]) — the probability that a traversal out of src follows e.
+
+    Whole frontiers expand at once: for frontier edges ``e = (w, u)`` the
+    membership test reads the reverse edge ``(u, w)`` through the cached
+    ``reverse_edge_index`` gather, and candidates join in first-occurrence
+    order (identical to the seed's sequential scan) up to
+    ``family_max_size``."""
     home = part[v]
-    fam = [v]
-    in_fam = {v}
-    frontier = [v]
-    while frontier and len(fam) < cfg.family_max_size:
-        nxt: List[int] = []
-        for w in frontier:
-            eidx, nbrs = _edge_indices_from(g, w)
-            if nbrs.size > cfg.max_scan_neighbors:
-                keep = np.argsort(-rel_mass_out[eidx])[: cfg.max_scan_neighbors]
-                eidx, nbrs = eidx[keep], nbrs[keep]
-            for u in nbrs:
-                u = int(u)
-                if u in in_fam or part[u] != home or moved[u]:
-                    continue
-                # traversal from u to w: reverse edge (u, w)
-                rev = _edge_index(g, u, w)
-                if rev is None:
-                    continue
-                if rel_mass_out[rev] > cfg.family_threshold:
-                    fam.append(u)
-                    in_fam.add(u)
-                    nxt.append(u)
-                    if len(fam) >= cfg.family_max_size:
-                        break
-            if len(fam) >= cfg.family_max_size:
-                break
-        frontier = nxt
+    fam = np.array([v], dtype=np.int64)
+    frontier = fam
+    while frontier.size and fam.size < cfg.family_max_size:
+        eidx = _frontier_edge_indices(g, frontier, rel_mass_out,
+                                      cfg.max_scan_neighbors)
+        if eidx.size == 0:
+            break
+        nbrs = g.dst[eidx].astype(np.int64)
+        # traversal from u to w is the reverse edge (u, w) of e = (w, u)
+        r = rev[eidx]
+        ok = (
+            (part[nbrs] == home)
+            & ~moved[nbrs]
+            & (r >= 0)
+            & ~np.isin(nbrs, fam)
+            # r == -1 rows are already masked; the clamped gather is harmless
+            & (rel_mass_out[np.maximum(r, 0)] > cfg.family_threshold)
+        )
+        cand = nbrs[ok]
+        if cand.size == 0:
+            break
+        # first-occurrence dedup preserves the seed's sequential join order
+        _, first = np.unique(cand, return_index=True)
+        cand = cand[np.sort(first)]
+        room = cfg.family_max_size - fam.size
+        cand = cand[:room]
+        fam = np.concatenate([fam, cand])
+        frontier = cand
     return fam
 
 
-def _family_gain(
+def _family_gains(
     g: LabelledGraph,
-    fam: List[int],
-    dest: int,
+    fam: np.ndarray,
     part: np.ndarray,
     edge_mass: np.ndarray,
-) -> Tuple[float, float]:
-    """(receiver_gain, sender_loss) in traversal-probability mass.
-
-    receiver_gain = mass on edges between the family and partition `dest`
-    (both directions); sender_loss = mass between the family and the rest of
-    its home partition.  Family-internal edges move with the family and edges
-    to third partitions stay cut, so neither affects the decision.
-    """
-    in_fam = set(fam)
-    home = part[fam[0]]
-    gain = loss = 0.0
-    for w in fam:
-        eidx, nbrs = _edge_indices_from(g, w)
-        for e, u in zip(eidx, nbrs):
-            u = int(u)
-            if u in in_fam:
-                continue
-            m_out = float(edge_mass[e])
-            rev = _edge_index(g, u, w)
-            m_in = float(edge_mass[rev]) if rev is not None else 0.0
-            if part[u] == dest:
-                gain += m_out + m_in
-            elif part[u] == home:
-                loss += m_out + m_in
-    return gain, loss
-
-
-def swap_iteration(
-    g: LabelledGraph,
-    part: np.ndarray,
-    field: ExtroversionResult,
+    rev: np.ndarray,
     k: int,
-    cfg: SwapConfig,
-    rng: np.random.Generator,
-) -> Tuple[np.ndarray, SwapStats]:
-    """One internal TAPER iteration of offer/receive vertex swapping."""
-    part = part.astype(np.int32).copy()
-    n = g.n
-    sizes = np.bincount(part, minlength=k).astype(np.int64)
-    ideal = n / k
-    max_size = int(np.floor((1.0 + cfg.balance_eps) * ideal))
-    min_size = int(np.ceil((1.0 - cfg.balance_eps) * ideal))
+) -> np.ndarray:
+    """``(k,)`` float64 — traversal mass between the family and *each*
+    partition (both edge directions), as one masked segment-sum over the
+    family's incident edges.
 
-    pr_src = np.maximum(field.pr[g.src], 1e-30)
-    rel_mass_out = field.edge_mass / pr_src
+    ``gains[dest]`` is the receiver gain of moving the family to ``dest``;
+    ``gains[home]`` is the sender loss.  Family-internal edges move with the
+    family and edges to third partitions stay cut, so neither affects the
+    decision.  (The seed recomputed this with Python loops once per
+    destination attempt.)"""
+    eidx, _ = _concat_csr_edges(g, fam)
+    if eidx.size == 0:
+        return np.zeros(k, dtype=np.float64)
+    nbrs = g.dst[eidx].astype(np.int64)
+    ext = ~np.isin(nbrs, fam)
+    eidx, nbrs = eidx[ext], nbrs[ext]
+    r = rev[eidx]
+    m = edge_mass[eidx].astype(np.float64) + np.where(
+        r >= 0, edge_mass[np.maximum(r, 0)].astype(np.float64), 0.0)
+    return np.bincount(part[nbrs], weights=m, minlength=k)
 
-    # --- candidate queues: most extroverted per partition, skip safe ones ---
+
+def _candidate_queue(
+    part: np.ndarray, field: ExtroversionResult, k: int, cfg: SwapConfig
+) -> np.ndarray:
+    """Most extroverted vertices per partition (safe ones skipped, §5.2.1),
+    merged into one globally descending queue (paper §3.1)."""
     ext = field.extroversion if cfg.rank_by == "extroversion" else field.extro_mass
-    candidates: List[int] = []
+    per_part: List[np.ndarray] = []
     for p in range(k):
         members = np.nonzero(part == p)[0]
         if members.size == 0:
@@ -177,43 +200,219 @@ def swap_iteration(
         top = members[np.argsort(-ext[members])]
         if cfg.candidates_per_part is not None:
             top = top[: cfg.candidates_per_part]
-        candidates.extend(int(v) for v in top)
-    # global processing order: descending score (paper §3.1)
-    candidates.sort(key=lambda v: -ext[v])
+        per_part.append(top.astype(np.int64))
+    if not per_part:
+        return np.empty(0, dtype=np.int64)
+    candidates = np.concatenate(per_part)
+    # stable sort keeps the per-partition order on ties, like the seed's
+    # Python list.sort(key=-ext)
+    return candidates[np.argsort(-ext[candidates], kind="stable")]
 
+
+def _lazy_prefs(
+    g: LabelledGraph, v: int, home: int, part: np.ndarray,
+    field: ExtroversionResult, k: int
+) -> np.ndarray:
+    """Two-phase path (§Perf-T2): per-destination preference computed lazily
+    from the candidate's own cut edges.  The ``bincount`` accumulates the
+    float32 masses into float64 in edge order — the same arithmetic as the
+    seed's ``np.add.at``."""
+    lo, hi = int(g.row_ptr[v]), int(g.row_ptr[v + 1])
+    pn = part[g.dst[lo:hi]]
+    cut = pn != home
+    # .astype: bincount of an empty input yields int64 zeros
+    return np.bincount(
+        pn[cut],
+        weights=field.edge_mass[lo:hi][cut].astype(np.float64),
+        minlength=k).astype(np.float64)
+
+
+def swap_iteration(
+    g: LabelledGraph,
+    part: np.ndarray,
+    field: ExtroversionResult,
+    k: int,
+    cfg: SwapConfig,
+    rng: np.random.Generator,
+) -> Tuple[np.ndarray, SwapStats]:
+    """One internal TAPER iteration of offer/receive vertex swapping.
+
+    Produces bit-identical partitions and stats to the seed implementation
+    (``repro.core.swap_ref.swap_iteration_reference``), but amortises almost
+    all per-candidate work into whole-array precomputes:
+
+    * the *joinable* relation (which neighbour can ever enter a family) only
+      shrinks during an iteration — vertices leave it by being moved, and
+      ``part`` changes only for moved vertices — so a candidate whose family
+      is a singleton at iteration start stays a singleton.  Singleton
+      candidates (the vast majority under the 0.5 "more likely than not"
+      threshold) get their k-destination gain rows and preference rows from
+      two batched ``bincount``/``argsort`` passes over the whole candidate
+      set;
+    * the sequential offer/receive walk then runs in plain Python over those
+      precomputed rows; a batched row is re-derived per candidate only when
+      a vertex in its 1-hop neighbourhood has moved since the batch (the
+      gains/prefs of v depend only on ``part``/``moved`` over N(v) ∪ {v});
+    * candidates with multi-member families take the frontier-batched
+      ``_family_of`` / ``_family_gains`` path against live state.
+    """
+    part = part.astype(np.int32).copy()
+    n = g.n
+    sizes = np.bincount(part, minlength=k).astype(np.int64)
+    ideal = n / k
+    max_size = int(np.floor((1.0 + cfg.balance_eps) * ideal))
+    min_size = int(np.ceil((1.0 - cfg.balance_eps) * ideal))
+
+    pr_src = np.maximum(field.pr[g.src], 1e-30)
+    rel_mass_out = field.edge_mass / pr_src
+    rev = g.reverse_edge_index
+    rev_ok = rev >= 0
+    rev_c = np.maximum(rev, 0)
+
+    candidates = _candidate_queue(part, field, k, cfg)
     moved = np.zeros(n, dtype=bool)
-    stats = SwapStats(0, 0, 0, len(candidates))
+    stats = SwapStats(0, 0, 0, int(candidates.size))
+    if candidates.size == 0:
+        return part, stats
 
-    for v in candidates:
+    # ---- whole-iteration precomputes --------------------------------------
+    # symmetric edge mass m_out + m_in, in the seed's float64 arithmetic
+    sym_mass = field.edge_mass.astype(np.float64) + np.where(
+        rev_ok, field.edge_mass[rev_c].astype(np.float64), 0.0)
+    # rel_mass_out of the reverse edge (u -> w traversal for edge e=(w, u))
+    rel_rev = np.where(rev_ok, rel_mass_out[rev_c], -np.inf)
+    # an edge can recruit its dst into src's family ("joinable"); this set
+    # only shrinks as vertices move, so it is computed once per iteration
+    join_e = (part[g.src] == part[g.dst]) & (rel_rev > cfg.family_threshold)
+    has_join = np.zeros(n, dtype=bool)
+    has_join[g.src[join_e]] = True
+    is_single = ~has_join[candidates]
+
+    # ---- batched gain/pref rows for singleton-family candidates -----------
+    S = candidates[is_single]
+    row_of = np.full(candidates.size, -1, dtype=np.int64)
+    row_of[is_single] = np.arange(S.size)
+    dense = field.ext_to is not None
+    if S.size:
+        eidx, s_cnts = _concat_csr_edges(g, S)
+        cid = np.repeat(np.arange(S.size, dtype=np.int64), s_cnts)
+        nbr = g.dst[eidx].astype(np.int64)
+        notself = nbr != np.repeat(S, s_cnts)
+        e_i, c_i, n_i = eidx[notself], cid[notself], nbr[notself]
+        # .astype guards: bincount of an empty input yields int64 zeros
+        gains_mat = np.bincount(
+            c_i * k + part[n_i], weights=sym_mass[e_i], minlength=S.size * k
+        ).astype(np.float64).reshape(S.size, k)
+        if dense:
+            prefs_mat = field.ext_to[S].copy()
+        else:
+            cut = part[n_i] != part[S][c_i]
+            prefs_mat = np.bincount(
+                c_i[cut] * k + part[n_i[cut]],
+                weights=field.edge_mass[e_i[cut]].astype(np.float64),
+                minlength=S.size * k,
+            ).astype(np.float64).reshape(S.size, k)
+        prefs_mat[np.arange(S.size), part[S]] = -np.inf
+        order_mat = np.argsort(-prefs_mat, axis=1)
+        gains_rows = gains_mat.tolist()
+        prefs_rows = prefs_mat.tolist()
+        order_rows = order_mat.tolist()
+    else:
+        gains_rows = prefs_rows = order_rows = []
+
+    # ---- sequential offer/receive walk (pure Python on cached rows) -------
+    rp = g.row_ptr.tolist()
+    dl = g.dst.tolist()
+    cand_list = candidates.tolist()
+    row_list = row_of.tolist()
+    single_list = is_single.tolist()
+    dirty = bytearray(n)  # vertices whose part/moved changed since the batch
+    sizes_l = sizes.tolist()
+    min_gain = cfg.min_gain
+
+    for ci, v in enumerate(cand_list):
         if moved[v]:
             continue
-        home = part[v]
-        if field.ext_to is not None:
-            prefs = field.ext_to[v].copy()
+        home = int(part[v])
+        if single_list[ci]:
+            fresh = not dirty[v]
+            if fresh:
+                for j in range(rp[v], rp[v + 1]):
+                    if dirty[dl[j]]:
+                        fresh = False
+                        break
+            row = row_list[ci]
+            if fresh:
+                gains = gains_rows[row]
+                prefs = prefs_rows[row]
+                order = order_rows[row]
+            else:
+                # 1-hop state changed: re-derive from live part[] (same
+                # arithmetic as the batch).  Preference rows built from
+                # ext_to are static — only the two-phase lazy prefs depend
+                # on neighbours' partitions; gains re-derive lazily below,
+                # only once a destination passes the balance check.
+                if dense:
+                    prefs = prefs_rows[row]
+                    order = order_rows[row]
+                else:
+                    prefs_a = _lazy_prefs(g, v, home, part, field, k)
+                    prefs_a[home] = -np.inf
+                    order = np.argsort(-prefs_a)
+                    prefs = prefs_a
+                gains = None
+            for dest in order:
+                if prefs[dest] <= 0.0:
+                    break  # no external mass toward remaining partitions
+                if (sizes_l[dest] + 1 > max_size
+                        or sizes_l[home] - 1 < min_size):
+                    stats.rejected_offers += 1
+                    continue
+                if gains is None:
+                    lo, hi = rp[v], rp[v + 1]
+                    nbrs = g.dst[lo:hi]
+                    ns = nbrs != v
+                    gains = np.bincount(part[nbrs[ns]],
+                                        weights=sym_mass[lo:hi][ns],
+                                        minlength=k)
+                if gains[dest] > gains[home] + min_gain:
+                    part[v] = dest
+                    moved[v] = True
+                    dirty[v] = 1
+                    sizes_l[home] -= 1
+                    sizes_l[dest] += 1
+                    stats.moves += 1
+                    stats.accepted_offers += 1
+                    break
+                stats.rejected_offers += 1
+            continue
+
+        # ---- multi-member family: frontier-batched path on live state ----
+        if dense:
+            prefs_a = field.ext_to[v].copy()
         else:
-            # two-phase path (§Perf-T2): per-destination preference computed
-            # lazily from the candidate's own cut edges
-            prefs = np.zeros(k)
-            eidx, nbrs = _edge_indices_from(g, v)
-            is_cut = part[nbrs] != home
-            np.add.at(prefs, part[nbrs[is_cut]], field.edge_mass[eidx[is_cut]])
-        prefs[home] = -np.inf
-        order = np.argsort(-prefs)
-        fam = _family_of(g, v, part, moved, rel_mass_out, cfg)
-        fs = len(fam)
-        for dest in order:
+            prefs_a = _lazy_prefs(g, v, home, part, field, k)
+        prefs_a[home] = -np.inf
+        order_a = np.argsort(-prefs_a)
+        fam = _family_of(g, v, part, moved, rel_mass_out, rev, cfg)
+        fs = int(fam.size)
+        gains_a = None  # computed on the first destination passing balance
+        for dest in order_a:
             dest = int(dest)
-            if prefs[dest] <= 0.0:
-                break  # no external mass toward remaining partitions
-            if sizes[dest] + fs > max_size or sizes[home] - fs < min_size:
+            if prefs_a[dest] <= 0.0:
+                break
+            if sizes_l[dest] + fs > max_size or sizes_l[home] - fs < min_size:
                 stats.rejected_offers += 1
                 continue
-            gain, loss = _family_gain(g, fam, dest, part, field.edge_mass)
-            if gain > loss + cfg.min_gain:
-                part[list(fam)] = dest
-                moved[list(fam)] = True
-                sizes[home] -= fs
-                sizes[dest] += fs
+            if gains_a is None:
+                gains_a = _family_gains(g, fam, part, field.edge_mass, rev, k)
+            if float(gains_a[dest]) > float(gains_a[home]) + min_gain:
+                part[fam] = dest
+                moved[fam] = True
+                for u in fam.tolist():
+                    dirty[u] = 1
+                sizes_l[home] -= fs
+                sizes_l[dest] += fs
                 stats.moves += fs
                 stats.accepted_offers += 1
                 break

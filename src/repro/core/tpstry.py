@@ -53,7 +53,7 @@ class TPSTry:
         self._queries: Dict[str, RPQ] = {}          # qhash -> expression
         self._freqs: Dict[str, float] = {}          # qhash -> relative frequency
         self._strings: Dict[str, FrozenSet[Tuple[str, ...]]] = {}
-        self._snapshot_p: Optional[np.ndarray] = None
+        self._snapshots: Dict[Optional[str], np.ndarray] = {}
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -195,16 +195,29 @@ class TPSTry:
         return dict(self._freqs)
 
     # -- snapshotting (§4.2: lazy VM re-evaluation between iterations) --------
-    def snapshot(self) -> None:
-        self._snapshot_p = np.array([n.p for n in self.nodes], dtype=np.float64)
+    def snapshot(self, key: Optional[str] = None) -> None:
+        """Record the current node probabilities.  ``key`` namespaces the
+        snapshot so independent observers (e.g. each Taper instance, plus an
+        online driver polling for drift) can track changes without clobbering
+        one another; ``None`` is the default shared slot."""
+        self._snapshots[key] = np.array([n.p for n in self.nodes],
+                                        dtype=np.float64)
 
-    def changed_since_snapshot(self, atol: float = 1e-12) -> np.ndarray:
+    def drop_snapshot(self, key: Optional[str] = None) -> None:
+        """Discard the snapshot stored under ``key`` (used by observers —
+        e.g. a Taper being garbage-collected — so per-observer slots don't
+        accumulate on a long-lived trie)."""
+        self._snapshots.pop(key, None)
+
+    def changed_since_snapshot(
+        self, atol: float = 1e-12, key: Optional[str] = None
+    ) -> np.ndarray:
         """Boolean mask over node ids whose probability changed since the
-        last snapshot (nodes added since snapshot count as changed)."""
+        last snapshot under ``key`` (nodes added since count as changed)."""
         cur = np.array([n.p for n in self.nodes], dtype=np.float64)
-        if self._snapshot_p is None:
+        prev = self._snapshots.get(key)
+        if prev is None:
             return np.ones(len(cur), dtype=bool)
-        prev = self._snapshot_p
         if len(prev) < len(cur):
             prev = np.concatenate([prev, np.full(len(cur) - len(prev), np.nan)])
         return ~np.isclose(cur, prev[: len(cur)], atol=atol, equal_nan=False)

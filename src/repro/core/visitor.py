@@ -68,6 +68,38 @@ class ExtroversionResult:
 _FIELD_CACHE: Dict[Tuple, object] = {}
 
 
+def _prior_columns(depth, labels_n, N, vlabels, lab_vcount, p, n):
+    """Depth-1 prior columns ``alpha[v, n1] = p(n1) / |{u : l(u)=label(n1)}|``.
+
+    Shared by the jnp and Pallas backends so the base case is arithmetically
+    identical (float32 division on-device) in both."""
+    cols = []
+    for i in range(N):
+        if depth[i] == 1:
+            li = int(labels_n[i])
+            prior = p[i] / jnp.maximum(lab_vcount[li].astype(jnp.float32), 1.0)
+            cols.append(jnp.where(vlabels == li, prior, 0.0))
+        else:
+            cols.append(jnp.zeros((n,), dtype=jnp.float32))
+    return jnp.stack(cols, axis=1) if N else jnp.zeros((n, 0), jnp.float32)
+
+
+def _field_aggregates(counted_nodes, k, dense_ext_to,
+                      alpha, mass, src, dst, part, local, n):
+    """Pr / extroversion / (optional) ext_to tail, shared by both backends."""
+    pr = jnp.zeros((n,), dtype=jnp.float32)
+    for i in counted_nodes:
+        pr = pr + alpha[:, i]
+    is_ext = 1.0 - local
+    extro_mass = jax.ops.segment_sum(mass * is_ext, src, num_segments=n)
+    extroversion = jnp.where(pr > _EPS, extro_mass / jnp.maximum(pr, _EPS), 0.0)
+    if dense_ext_to:
+        seg = src.astype(jnp.int32) * k + part[dst]
+        ext_to = jax.ops.segment_sum(mass * is_ext, seg, num_segments=n * k)
+        return alpha, pr, mass, extro_mass, extroversion, ext_to.reshape(n, k)
+    return alpha, pr, mass, extro_mass, extroversion
+
+
 def _build_field_fn(topology: Tuple, trie: TrieArrays, k: int, depth_cap: int,
                     fused: bool = True, dense_ext_to: bool = True):
     """Build the jitted field function for a fixed trie *topology*.
@@ -101,28 +133,11 @@ def _build_field_fn(topology: Tuple, trie: TrieArrays, k: int, depth_cap: int,
     ]
 
     def _priors(vlabels, lab_vcount, p, n):
-        cols = []
-        for i in range(N):
-            if depth[i] == 1:
-                li = int(labels_n[i])
-                prior = p[i] / jnp.maximum(lab_vcount[li].astype(jnp.float32), 1.0)
-                cols.append(jnp.where(vlabels == li, prior, 0.0))
-            else:
-                cols.append(jnp.zeros((n,), dtype=jnp.float32))
-        return jnp.stack(cols, axis=1) if N else jnp.zeros((n, 0), jnp.float32)
+        return _prior_columns(depth, labels_n, N, vlabels, lab_vcount, p, n)
 
     def _aggregates(alpha, mass, src, dst, part, local, n, m):
-        pr = jnp.zeros((n,), dtype=jnp.float32)
-        for i in counted_nodes:
-            pr = pr + alpha[:, i]
-        is_ext = 1.0 - local
-        extro_mass = jax.ops.segment_sum(mass * is_ext, src, num_segments=n)
-        extroversion = jnp.where(pr > _EPS, extro_mass / jnp.maximum(pr, _EPS), 0.0)
-        if dense_ext_to:
-            seg = src.astype(jnp.int32) * k + part[dst]
-            ext_to = jax.ops.segment_sum(mass * is_ext, seg, num_segments=n * k)
-            return alpha, pr, mass, extro_mass, extroversion, ext_to.reshape(n, k)
-        return alpha, pr, mass, extro_mass, extroversion
+        return _field_aggregates(counted_nodes, k, dense_ext_to,
+                                 alpha, mass, src, dst, part, local, n)
 
     @partial(jax.jit, static_argnames=("n", "m"))
     def field_fn_naive(
@@ -184,6 +199,144 @@ def _build_field_fn(topology: Tuple, trie: TrieArrays, k: int, depth_cap: int,
     return field_fn_fused if fused else field_fn_naive
 
 
+def _device_inputs(g: LabelledGraph, pre: Dict, cnt, lab_vcount) -> Dict:
+    """Device-resident copies of the partition-independent field inputs.
+
+    Cached inside the caller's ``_precomputed`` dict (Taper keeps one per
+    graph), so repeated ``invoke`` iterations re-use the same device buffers
+    instead of re-uploading the edge list every call.  Only the partition
+    vector crosses host->device per iteration.
+    """
+    dev = pre.get("_dev")
+    if dev is None:
+        dev = {
+            "src": jnp.asarray(g.src),
+            "dst": jnp.asarray(g.dst),
+            "labels": jnp.asarray(g.labels),
+            "cnt": jnp.asarray(cnt),
+            "lab_vcount": jnp.asarray(lab_vcount),
+        }
+        pre["_dev"] = dev
+    return dev
+
+
+_TRANSITION_CACHE: Dict[Tuple, np.ndarray] = {}
+
+
+def _capped_transition(trie: TrieArrays, depth_cap: int) -> np.ndarray:
+    """(L, N, N) trie transition tensor with children beyond ``depth_cap``
+    zeroed (§5.2.2 time heuristic).  Cached per (topology, probabilities);
+    bounded so drifting workload frequencies (a fresh ``cond_p`` per
+    invocation) cannot grow the cache without limit."""
+    from repro.kernels.vm_step.ref import build_transition
+
+    key = (trie.topology_signature(), int(depth_cap), trie.cond_p.tobytes())
+    T = _TRANSITION_CACHE.get(key)
+    if T is None:
+        T = build_transition(trie.parent, trie.label, trie.cond_p,
+                             trie.n_labels)
+        if depth_cap < trie.max_depth:
+            T[:, :, trie.depth > depth_cap] = 0.0
+        while len(_TRANSITION_CACHE) >= 8:
+            _TRANSITION_CACHE.pop(next(iter(_TRANSITION_CACHE)))
+        _TRANSITION_CACHE[key] = T
+    return T
+
+
+def _pallas_field(
+    g: LabelledGraph,
+    trie: TrieArrays,
+    part: np.ndarray,
+    k: int,
+    depth_cap: int,
+    pre: Dict,
+    dense_ext_to: bool,
+    interpret: Optional[bool] = None,
+):
+    """Pallas-backed extroversion field: the depth-advancing DP step runs as
+    the ``vm_step`` TPU kernel over the graph's cached edge packing.
+
+    The depth recurrence is expressed as a chain of *delta* states: ``beta_d``
+    holds only the depth-``d`` trie columns, so applying the full transition
+    tensor once per depth advances every state without double counting:
+
+        beta_1 = priors;  beta_d = vm_step(beta_{d-1}, T | local edges)
+        alpha  = sum_d beta_d
+        mass  += rowsum over children of the beta_{d-1} messages (ALL edges)
+
+    The packing (src/dst/label/1-cnt channels) is partition-independent and
+    cached on the graph; per iteration only the partition vector and the
+    derived local-edge mask move to the device.  ``interpret`` defaults to
+    auto: off when running on a real TPU, on elsewhere.
+    """
+    from repro.kernels.vm_step.ops import vm_step
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    n, m = g.n, g.m
+    N = trie.n_nodes
+    cnt = pre.get("cnt")
+    if cnt is None:
+        cnt = g.neighbor_label_counts()
+    lab_vcount = pre.get("lab_vcount")
+    if lab_vcount is None:
+        lab_vcount = g.label_counts()
+    dev = _device_inputs(g, pre, cnt, lab_vcount)
+    src, dst, vlabels = dev["src"], dev["dst"], dev["labels"]
+
+    packed, dst_label, inv_cnt_packed, dst_global = g.vm_packing(cnt=cnt)
+    pdev = pre.get("_vm_dev")
+    if pdev is None:
+        inv_cnt_edge = 1.0 / np.maximum(
+            np.asarray(cnt)[g.src, g.labels[g.dst]], 1.0)
+        pdev = {
+            "packed_src": jnp.asarray(packed.src),
+            "dst_global": jnp.asarray(dst_global),
+            "inv_cnt_edge": jnp.asarray(inv_cnt_edge.astype(np.float32)),
+        }
+        pre["_vm_dev"] = pdev
+
+    # device-resident transition tensor, re-uploaded only when the trie
+    # probabilities (or depth cap) change — not per iteration
+    T_key = (trie.topology_signature(), int(depth_cap), trie.cond_p.tobytes())
+    t_hit = pre.get("_T_dev")
+    if t_hit is None or t_hit[0] != T_key:
+        T = jnp.asarray(_capped_transition(trie, depth_cap))
+        Tsum = T.sum(axis=2)                   # (L, N) mass per (label, parent)
+        pre["_T_dev"] = (T_key, T, Tsum)
+    else:
+        _, T, Tsum = t_hit
+    part_dev = jnp.asarray(part.astype(np.int32))
+    local = (part_dev[src] == part_dev[dst]).astype(jnp.float32)   # (m,)
+    local_packed = (part_dev[pdev["packed_src"]]
+                    == part_dev[pdev["dst_global"]]).astype(jnp.float32)
+    inv_local = inv_cnt_packed * local_packed  # 0 on padding (inv_cnt is 0)
+    dst_lab = vlabels[dst]
+    inv_cnt_edge = pdev["inv_cnt_edge"]
+
+    # depth-1 priors — same device arithmetic as the jnp backend
+    alpha = _prior_columns(trie.depth, trie.label, N, vlabels,
+                           dev["lab_vcount"], jnp.asarray(trie.p), n)
+    beta = alpha
+    mass = jnp.zeros((m,), dtype=jnp.float32)
+    max_depth = min(trie.max_depth, depth_cap)
+    for _ in range(2, max_depth + 1):
+        # per-edge mass of the depth step over ALL edges (cut + local)
+        mass = mass + (beta[src] * Tsum[dst_lab]).sum(axis=1) * inv_cnt_edge
+        # the DP itself advances over local edges only — vm_step kernel
+        beta = vm_step(beta, T, packed, dst_label, inv_local, n,
+                       interpret=interpret, use_pallas=True)
+        alpha = alpha + beta
+
+    counted = [
+        i for i in range(N)
+        if 1 <= int(trie.depth[i]) < max_depth and not bool(trie.is_leaf[i])
+    ]
+    return _field_aggregates(counted, k, dense_ext_to,
+                             alpha, mass, src, dst, part_dev, local, n)
+
+
 def extroversion_field(
     g: LabelledGraph,
     trie: TrieArrays,
@@ -193,40 +346,61 @@ def extroversion_field(
     _precomputed: Optional[Dict] = None,
     fused: bool = True,
     dense_ext_to: bool = True,
+    backend: str = "jnp",
 ) -> ExtroversionResult:
     """Compute the extroversion field of ``part`` under the workload trie.
 
     ``depth_cap`` implements the paper's §5.2.2 time heuristic (stop VM row
     expansion at path length < t, trading accuracy for time).
+
+    ``dense_ext_to=True`` (the default, matching ``TaperConfig``) also
+    returns the dense ``(n, k)`` per-destination external-mass matrix in one
+    fused pass — one extra ``segment_sum`` and ``n*k`` floats of memory.
+    ``dense_ext_to=False`` selects the two-phase §Perf-T2 trade-off: the
+    field pass skips the matrix and the swap engine derives each
+    *candidate's* destination preferences lazily from its own cut edges —
+    cheaper when ``k`` is large or candidate queues are short, at the cost
+    of a little host work per candidate.
+
+    ``backend`` selects the DP engine: ``"jnp"`` (the fused XLA
+    transcription) or ``"pallas"`` (the ``vm_step`` TPU kernel over the
+    graph's cached edge packing; interpret mode auto-disables on TPU).
     """
     depth_cap = depth_cap or trie.max_depth
-    key = (trie.topology_signature(), k, depth_cap, g.n, g.m, fused, dense_ext_to)
-    fn = _FIELD_CACHE.get(key)
-    if fn is None:
-        fn = _build_field_fn(key, trie, k, depth_cap, fused=fused,
-                             dense_ext_to=dense_ext_to)
-        _FIELD_CACHE[key] = fn
+    pre = _precomputed if _precomputed is not None else {}
+    if backend == "pallas":
+        out = _pallas_field(g, trie, part, k, depth_cap, pre, dense_ext_to)
+    elif backend == "jnp":
+        key = (trie.topology_signature(), k, depth_cap, g.n, g.m, fused,
+               dense_ext_to)
+        fn = _FIELD_CACHE.get(key)
+        if fn is None:
+            fn = _build_field_fn(key, trie, k, depth_cap, fused=fused,
+                                 dense_ext_to=dense_ext_to)
+            _FIELD_CACHE[key] = fn
 
-    pre = _precomputed or {}
-    cnt = pre.get("cnt")
-    if cnt is None:
-        cnt = g.neighbor_label_counts()
-    lab_vcount = pre.get("lab_vcount")
-    if lab_vcount is None:
-        lab_vcount = g.label_counts()
+        cnt = pre.get("cnt")
+        if cnt is None:
+            cnt = g.neighbor_label_counts()
+        lab_vcount = pre.get("lab_vcount")
+        if lab_vcount is None:
+            lab_vcount = g.label_counts()
+        dev = _device_inputs(g, pre, cnt, lab_vcount)
 
-    out = fn(
-        jnp.asarray(g.src),
-        jnp.asarray(g.dst),
-        jnp.asarray(g.labels),
-        jnp.asarray(cnt),
-        jnp.asarray(lab_vcount),
-        jnp.asarray(part.astype(np.int32)),
-        jnp.asarray(trie.p),
-        jnp.asarray(trie.cond_p),
-        n=g.n,
-        m=g.m,
-    )
+        out = fn(
+            dev["src"],
+            dev["dst"],
+            dev["labels"],
+            dev["cnt"],
+            dev["lab_vcount"],
+            jnp.asarray(part.astype(np.int32)),
+            jnp.asarray(trie.p),
+            jnp.asarray(trie.cond_p),
+            n=g.n,
+            m=g.m,
+        )
+    else:
+        raise ValueError(f"unknown field backend {backend!r}")
     if dense_ext_to:
         alpha, pr, mass, extro_mass, extroversion, ext_to = out
         ext_to = np.asarray(ext_to)

@@ -33,6 +33,8 @@ class LabelledGraph:
     src: np.ndarray
     dst: np.ndarray
     row_ptr: np.ndarray = field(repr=False, default=None)
+    _rev_index: Optional[np.ndarray] = field(repr=False, default=None, compare=False)
+    _vm_pack_cache: Dict = field(repr=False, default_factory=dict, compare=False)
 
     def __post_init__(self):
         self.labels = np.asarray(self.labels, dtype=np.int32)
@@ -92,6 +94,67 @@ class LabelledGraph:
 
     def neighbors(self, v: int) -> np.ndarray:
         return self.dst[self.row_ptr[v] : self.row_ptr[v + 1]]
+
+    @property
+    def reverse_edge_index(self) -> np.ndarray:
+        """``(m,)`` int64 — index of the reverse edge ``(w, u)`` for each
+        directed edge ``i = (u, w)``, or ``-1`` if absent.
+
+        The edge list is sorted by ``(src, dst)``, so the flat keys
+        ``src * n + dst`` are ascending and every reverse edge is found with
+        one vectorised ``searchsorted`` — no per-edge host loops.  Cached on
+        first use (the graph is immutable after construction); symmetric
+        graphs built via :meth:`from_undirected_edges` always yield a total
+        (no ``-1``) mapping with ``rev[rev] == arange(m)``.
+        """
+        if self._rev_index is None:
+            keys = self.src.astype(np.int64) * self.n + self.dst
+            rkeys = self.dst.astype(np.int64) * self.n + self.src
+            pos = np.searchsorted(keys, rkeys)
+            pos = np.minimum(pos, max(self.m - 1, 0))
+            found = (keys[pos] == rkeys) if self.m else np.zeros(0, bool)
+            self._rev_index = np.where(found, pos, -1).astype(np.int64)
+        return self._rev_index
+
+    def vm_packing(self, cnt: Optional[np.ndarray] = None,
+                   block_n: int = 128, block_e: int = 256):
+        """Cached edge packing for the ``vm_step`` Pallas kernel.
+
+        Returns ``(packed, dst_label, inv_cnt, dst_global)`` where the first
+        three follow :func:`repro.kernels.vm_step.ops.pack_vm_inputs` and
+        ``dst_global`` is the ``(E_pad,)`` global destination id per packed
+        slot.  Padding slots alias the first vertex of their block
+        (``dst_local == 0``, i.e. ``block_id * block_n``) — use
+        ``packed.pad_mask``, not ``dst_global``, to identify padding; the
+        zeroed ``inv_cnt`` channel is what neutralises padded slots in the
+        kernel.  The packing depends only on the graph (not on
+        any partitioning), so it is computed once and reused across every
+        extroversion-field evaluation/iteration.  A non-default ``cnt`` is
+        checked against the cached one — a mismatch rebuilds rather than
+        silently returning channels derived from a different count matrix.
+        """
+        # normalise first so a cnt=None call never aliases an entry built
+        # from a custom count matrix (the graph's own counts are cached too)
+        if cnt is None:
+            if "_default_cnt" not in self._vm_pack_cache:
+                self._vm_pack_cache["_default_cnt"] = self.neighbor_label_counts()
+            cnt = self._vm_pack_cache["_default_cnt"]
+        key = (int(block_n), int(block_e))
+        hit = self._vm_pack_cache.get(key)
+        if hit is not None:
+            cached_cnt, entry = hit
+            if cached_cnt is cnt or np.array_equal(cnt, cached_cnt):
+                return entry
+        from repro.kernels.vm_step.ops import pack_vm_inputs
+
+        packed, dst_label, inv_cnt = pack_vm_inputs(
+            self.src, self.dst, self.labels, cnt, self.n,
+            block_n=block_n, block_e=block_e)
+        dst_global = (np.repeat(packed.meta[:, 0], packed.block_e)
+                      * packed.block_n) + packed.dst_local
+        entry = (packed, dst_label, inv_cnt, dst_global.astype(np.int32))
+        self._vm_pack_cache[key] = (np.asarray(cnt), entry)
+        return entry
 
     def label_counts(self) -> np.ndarray:
         """(n_labels,) number of vertices per label."""

@@ -24,6 +24,7 @@ class PackedEdges:
     dst_local: np.ndarray    # (E_pad,)
     meta: np.ndarray         # (EB, 2) [dst_block_id, is_first]
     pad_mask: np.ndarray     # (E_pad,) True on real edges
+    order: np.ndarray        # (E,) stable argsort of edge_dst: raw -> packed order
     n_blocks_out: int
     block_n: int
     block_e: int
@@ -56,6 +57,7 @@ def pack_edges(edge_src: np.ndarray, edge_dst: np.ndarray, n: int,
         dst_local=np.concatenate(dstloc_chunks).astype(np.int32),
         meta=np.asarray(meta, np.int32),
         pad_mask=np.concatenate(mask_chunks),
+        order=order,
         n_blocks_out=n_blocks_out,
         block_n=block_n,
         block_e=block_e,
@@ -94,10 +96,13 @@ def segment_spmm(
     return out[:n_out]
 
 
-def pack_weights(packed: PackedEdges, edge_src, edge_dst, edge_w) -> jnp.ndarray:
-    """Reorder raw per-edge weights into packed order (0 on padding)."""
-    order = np.argsort(np.asarray(edge_dst), kind="stable")
-    w_sorted = np.asarray(edge_w)[order]
+def pack_weights(packed: PackedEdges, edge_w) -> jnp.ndarray:
+    """Reorder raw per-edge weights into packed order (0 on padding).
+
+    ``edge_w`` must align with the raw edge list the packing was built from;
+    the dst-sort order recorded at pack time is applied directly.
+    """
+    w_sorted = np.asarray(edge_w)[packed.order]
     out = np.zeros(packed.src.shape[0], w_sorted.dtype)
     out[packed.pad_mask] = w_sorted
     return jnp.asarray(out)

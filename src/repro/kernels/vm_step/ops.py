@@ -16,7 +16,7 @@ def pack_vm_inputs(edge_src, edge_dst, labels, cnt, n: int,
                    block_n: int = 128, block_e: int = 256):
     """Pack edges (sorted by dst) and per-edge label / 1/cnt channels."""
     packed = pack_edges(edge_src, edge_dst, n, block_n, block_e)
-    order = np.argsort(np.asarray(edge_dst), kind="stable")
+    order = packed.order  # pack_edges already sorted by dst; reuse its order
     dst_lab_sorted = np.asarray(labels)[np.asarray(edge_dst)[order]]
     src_sorted = np.asarray(edge_src)[order]
     inv = 1.0 / np.maximum(

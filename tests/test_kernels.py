@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.kernels.embedding_bag.ops import embedding_bag_pallas
@@ -95,7 +97,7 @@ def test_segment_spmm_sweep(n, e, f, block_n, block_e, seed):
     x = jnp.asarray(rng.normal(size=(n, f)).astype(np.float32))
 
     packed = pack_edges(src, dst, n, block_n, block_e)
-    w_packed = pack_weights(packed, src, dst, w)
+    w_packed = pack_weights(packed, w)
     out = segment_spmm(x, packed, w_packed, n)
     ref = segment_spmm_reference(x, jnp.asarray(src), jnp.asarray(dst),
                                  jnp.asarray(w), n)
@@ -111,7 +113,7 @@ def test_segment_spmm_fallback_matches():
     w = rng.normal(size=e).astype(np.float32)
     x = jnp.asarray(rng.normal(size=(n, f)).astype(np.float32))
     packed = pack_edges(src, dst, n, 32, 64)
-    wp = pack_weights(packed, src, dst, w)
+    wp = pack_weights(packed, w)
     out_k = segment_spmm(x, packed, wp, n, use_pallas=True)
     out_f = segment_spmm(x, packed, wp, n, use_pallas=False)
     np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_f),

@@ -1,6 +1,8 @@
 """Hypothesis property tests for TAPER core invariants."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core.rpq import RPQ, concat, label, parse_rpq, star, union

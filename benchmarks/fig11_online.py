@@ -31,7 +31,9 @@ def run(report: Optional[Report] = None) -> Report:
     taper = taper_for(g, max_iterations=4)
 
     stream = WorkloadStream(list(MQ.values()), period=float(TICKS), seed=3)
-    sketch = FrequencySketch(half_life=2 * BATCH)
+    # observe_batch advances the decay clock once per batch, so the half
+    # life is measured in batches (ticks), not individual observations
+    sketch = FrequencySketch(half_life=2.0)
 
     # start from a partitioning fitted to the t=0 workload
     part = taper.invoke(hash_p, stream.workload()).final_part

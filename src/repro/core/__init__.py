@@ -8,8 +8,12 @@ from repro.core.rpq import RPQ, parse_rpq, label, concat, union, star
 from repro.core.tpstry import TPSTry, TrieArrays
 from repro.core.visitor import ExtroversionResult, extroversion_field, vm_cell
 from repro.core.taper import Taper, TaperConfig, TaperReport
+from repro.core.online import OnlinePolicy, OnlineStepReport, OnlineTaper
 
 __all__ = [
+    "OnlinePolicy",
+    "OnlineStepReport",
+    "OnlineTaper",
     "RPQ",
     "parse_rpq",
     "label",

@@ -1,0 +1,253 @@
+"""Online TAPER driver: continuous partition enhancement under combined
+workload *and* topology drift (paper §1: "incrementally adjust the
+partitioning in reaction to changes in the graph topology, the query
+workload, or both").
+
+:class:`OnlineTaper` owns a mutable :class:`~repro.graphs.graph.LabelledGraph`,
+a partition vector, a :class:`~repro.workload.sketch.FrequencySketch` of the
+observed query stream and an accumulated *dirty frontier* of mutated
+vertices.  Each tick the caller feeds it query observations
+(:meth:`observe`) and topology deltas (:meth:`apply_mutations`); the
+:class:`OnlinePolicy` then decides *when* a TAPER invocation is worth its
+cost — not a fixed cadence but triggers on
+
+* **topology**: the dirty frontier exceeding a fraction of the graph —
+  served by a *mutation-local* invocation whose swap candidate queue is
+  seeded from the frontier only (``Taper.invoke(frontier=...)``);
+* **workload**: L1 drift of the sketched frequencies since the last
+  invocation;
+* **ipt regression**: a caller-measured ipt exceeding the post-invocation
+  baseline by a configured ratio;
+* **cadence**: a hard upper bound on ticks between invocations.
+
+Brand-new vertices are placed greedily on arrival: each picks the partition
+holding the most intra-partition traversal probability over its already-
+placed neighbours (weighted by the last extroversion field's per-vertex
+traversal probability ``Pr(v)`` when available), subject to the balance
+cap — so the partitioning never degenerates between invocations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dfield
+from typing import TYPE_CHECKING, Dict, Iterable, Optional
+
+import numpy as np
+
+from repro.core.taper import Taper, TaperConfig, TaperReport
+from repro.graphs.graph import AppliedMutation, LabelledGraph, MutationBatch
+from repro.graphs.partition import hash_partition
+from repro.utils import get_logger
+
+if TYPE_CHECKING:  # import cycle guard: workload.sketch imports repro.core.rpq
+    from repro.workload.sketch import FrequencySketch
+
+log = get_logger("core.online")
+
+
+@dataclass
+class OnlinePolicy:
+    """When to spend a TAPER invocation (see module docstring)."""
+
+    cadence: int = 8            # invoke at least every N ticks (fallback)
+    min_interval: int = 1       # never invoke more often than this
+    dirty_fraction: float = 0.02   # topology trigger: |dirty| >= frac * n
+    drift_l1: float = 0.5       # workload trigger: L1(freqs, freqs@invoke)
+    ipt_regression: float = 1.2  # ipt trigger: measured / measured@invoke
+    frontier_only: bool = True  # topology-triggered invocations are local
+    min_freq: float = 1e-4      # sketch noise floor for the workload
+
+
+@dataclass
+class OnlineStepReport:
+    """Outcome of one :meth:`OnlineTaper.step` tick."""
+
+    tick: int
+    invoked: bool
+    reason: str = ""
+    dirty_before: int = 0
+    report: Optional[TaperReport] = None
+
+
+class OnlineTaper:
+    """Serving-loop driver combining workload sketching, topology deltas and
+    policy-gated TAPER invocations over one mutable graph."""
+
+    def __init__(
+        self,
+        g: LabelledGraph,
+        k: int,
+        part: Optional[np.ndarray] = None,
+        config: Optional[TaperConfig] = None,
+        policy: Optional[OnlinePolicy] = None,
+        sketch: Optional["FrequencySketch"] = None,
+    ):
+        from repro.workload.sketch import FrequencySketch
+
+        self.g = g
+        self.k = k
+        self.policy = policy or OnlinePolicy()
+        self.taper = Taper(g, k, config)
+        self.sketch = sketch or FrequencySketch(half_life=4.0)
+        self.part = (
+            np.asarray(part, dtype=np.int32).copy()
+            if part is not None else hash_partition(g.n, k)
+        )
+        if self.part.shape[0] != g.n:
+            raise ValueError("part length != g.n")
+        self._dirty = np.zeros(g.n, dtype=bool)
+        self.tick = 0
+        self.invocations = 0
+        self._last_invoke_tick = 0
+        self._freqs_at_invoke: Dict[str, float] = {}
+        self._ipt_at_invoke: Optional[float] = None
+
+    # -- inputs ---------------------------------------------------------------
+    def observe(self, queries: Iterable) -> None:
+        """Feed one batch of observed query instances (one sketch tick)."""
+        self.sketch.observe_batch(queries)
+
+    def apply_mutations(self, batch: MutationBatch) -> AppliedMutation:
+        """Apply a topology delta: mutate the graph in place, greedily place
+        brand-new vertices, and fold the changed endpoints into the dirty
+        frontier for the next mutation-local invocation."""
+        return self.ingest(self.g.apply_mutations(batch))
+
+    def ingest(self, applied: AppliedMutation) -> AppliedMutation:
+        """Absorb a mutation already applied to ``self.g`` (placement +
+        dirty-frontier bookkeeping only) — for callers that apply the graph
+        delta themselves, e.g. to account maintenance cost separately.
+
+        The record must be the graph's *latest* mutation and contiguous
+        with this driver's state — a skipped or replayed record would
+        desync the partition vector, so it fails fast instead."""
+        if applied.version != self.g.version:
+            raise ValueError(
+                f"stale AppliedMutation: record version {applied.version} "
+                f"!= graph version {self.g.version} (ingest immediately "
+                "after each apply_mutations)")
+        if self.part.shape[0] != applied.n_before:
+            raise ValueError(
+                f"non-contiguous AppliedMutation: tracked part has "
+                f"{self.part.shape[0]} vertices, record expects "
+                f"{applied.n_before}")
+        grow = applied.n_after - applied.n_before
+        if grow:
+            self.part = np.concatenate(
+                [self.part, np.full(grow, -1, np.int32)])
+            self._dirty = np.concatenate(
+                [self._dirty, np.ones(grow, dtype=bool)])
+            self._place_new(np.arange(applied.n_before, applied.n_after))
+        if not applied.is_noop:
+            dirty = applied.dirty_vertices()
+            self._dirty[dirty[dirty < self.g.n]] = True
+        return applied
+
+    def _last_field(self):
+        memo = self.taper._field_memo
+        return memo[1] if memo is not None else None
+
+    def _place_new(self, vs: np.ndarray) -> None:
+        """Greedy arrival placement: argmax over partitions of the placed
+        neighbours' traversal-probability mass (paper's intra-partition
+        traversal probability, approximated by the last field's ``Pr``),
+        subject to the configured balance cap."""
+        g, k = self.g, self.k
+        sizes = np.bincount(self.part[self.part >= 0], minlength=k).astype(np.int64)
+        max_size = int(np.floor(
+            (1.0 + self.taper.config.balance_eps) * g.n / k))
+        fld = self._last_field()
+        pr = fld.pr if fld is not None else None
+        for v in vs.tolist():
+            nbrs = g.neighbors(v).astype(np.int64)
+            nbrs = nbrs[self.part[nbrs] >= 0]
+            dest = None
+            if nbrs.size:
+                if pr is not None:
+                    w = np.where(nbrs < pr.shape[0], pr[np.minimum(
+                        nbrs, pr.shape[0] - 1)], 0.0).astype(np.float64)
+                    # unknown-probability neighbours still count a little,
+                    # so a vertex wholly attached to new vertices is not
+                    # placed blind
+                    w = np.maximum(w, 1e-12)
+                else:
+                    w = np.ones(nbrs.size, dtype=np.float64)
+                score = np.bincount(self.part[nbrs], weights=w, minlength=k)
+                for p in np.argsort(-score):
+                    if sizes[p] < max_size:
+                        dest = int(p)
+                        break
+            if dest is None:
+                dest = int(np.argmin(sizes))
+            self.part[v] = dest
+            sizes[dest] += 1
+
+    # -- the policy loop ------------------------------------------------------
+    def _decide(self, measured_ipt: Optional[float]) -> Optional[str]:
+        pol = self.policy
+        since = self.tick - self._last_invoke_tick
+        if since < pol.min_interval:
+            return None
+        if int(self._dirty.sum()) >= max(1, int(pol.dirty_fraction * self.g.n)):
+            return "topology"
+        # drift is only defined against a post-invocation baseline — before
+        # the first invocation the cadence/topology triggers decide (an
+        # empty baseline would read as ~1.0 drift on a stationary workload)
+        freqs = self.sketch.frequencies(pol.min_freq) if self.invocations else {}
+        if freqs:
+            keys = set(freqs) | set(self._freqs_at_invoke)
+            drift = sum(
+                abs(freqs.get(h, 0.0) - self._freqs_at_invoke.get(h, 0.0))
+                for h in keys)
+            if drift >= pol.drift_l1:
+                return "workload"
+        if (measured_ipt is not None and self._ipt_at_invoke is not None
+                and self._ipt_at_invoke > 0
+                and measured_ipt / self._ipt_at_invoke >= pol.ipt_regression):
+            return "ipt"
+        if since >= pol.cadence:
+            return "cadence"
+        return None
+
+    def step(self, measured_ipt: Optional[float] = None) -> OnlineStepReport:
+        """Advance one tick and invoke TAPER if the policy says so.
+
+        ``measured_ipt`` (optional) is the caller's current ipt measurement
+        for the live partitioning — it feeds the regression trigger and is
+        recorded as the post-invocation baseline."""
+        self.tick += 1
+        dirty_before = int(self._dirty.sum())
+        if (measured_ipt is not None and self._ipt_at_invoke is None
+                and self.invocations):
+            # first measurement after an invocation becomes the regression
+            # baseline (the pre-invocation measure would never trigger)
+            self._ipt_at_invoke = measured_ipt
+        reason = self._decide(measured_ipt)
+        if reason is None:
+            return OnlineStepReport(self.tick, False, "", dirty_before)
+        report = self.invoke(reason=reason)
+        return OnlineStepReport(
+            self.tick, report is not None, reason, dirty_before, report)
+
+    def invoke(self, reason: str = "manual") -> Optional[TaperReport]:
+        """Run one TAPER invocation now (policy bypassed).  Topology-
+        triggered invocations are mutation-local (frontier-seeded) when
+        ``policy.frontier_only``; other reasons use the full queue."""
+        workload = self.sketch.workload(self.policy.min_freq)
+        if not workload:
+            log.info("online invoke skipped: no observed workload yet")
+            return None
+        frontier = None
+        if reason == "topology" and self.policy.frontier_only:
+            frontier = np.nonzero(self._dirty)[0]
+        report = self.taper.invoke(self.part, workload, frontier=frontier)
+        self.part = report.final_part.astype(np.int32).copy()
+        self._dirty[:] = False
+        self.invocations += 1
+        self._last_invoke_tick = self.tick
+        self._freqs_at_invoke = self.sketch.frequencies(self.policy.min_freq)
+        self._ipt_at_invoke = None  # re-baselined by the next measured step
+        log.info(
+            "online invoke #%d (reason=%s): %d moves, objective %.4f",
+            self.invocations, reason, report.total_moves,
+            report.objective[-1] if report.objective else float("nan"))
+        return report

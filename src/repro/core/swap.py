@@ -69,15 +69,9 @@ class SwapStats:
 def _concat_csr_edges(
     g: LabelledGraph, vs: np.ndarray
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Concatenated CSR edge indices of ``vs`` — each vertex's edges in CSR
-    order, vertices in the given order — plus the per-vertex edge counts."""
-    starts = g.row_ptr[vs]
-    cnts = g.row_ptr[vs + 1] - starts
-    total = int(cnts.sum())
-    if total == 0:
-        return np.empty(0, dtype=np.int64), cnts
-    offs = np.repeat(starts - (np.cumsum(cnts) - cnts), cnts)
-    return offs + np.arange(total, dtype=np.int64), cnts
+    """``LabelledGraph.edge_indices_of`` plus the per-vertex edge counts."""
+    cnts = g.row_ptr[vs + 1] - g.row_ptr[vs]
+    return g.edge_indices_of(vs), cnts
 
 
 def _frontier_edge_indices(
@@ -181,14 +175,24 @@ def _family_gains(
 
 
 def _candidate_queue(
-    part: np.ndarray, field: ExtroversionResult, k: int, cfg: SwapConfig
+    part: np.ndarray,
+    field: ExtroversionResult,
+    k: int,
+    cfg: SwapConfig,
+    candidate_mask: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """Most extroverted vertices per partition (safe ones skipped, §5.2.1),
-    merged into one globally descending queue (paper §3.1)."""
+    merged into one globally descending queue (paper §3.1).
+
+    ``candidate_mask`` restricts the queue to a vertex subset — the dirty
+    frontier of mutated vertices for mutation-local online invocations
+    (paper §5.5's queue pruning generalised to topology deltas)."""
     ext = field.extroversion if cfg.rank_by == "extroversion" else field.extro_mass
     per_part: List[np.ndarray] = []
     for p in range(k):
         members = np.nonzero(part == p)[0]
+        if candidate_mask is not None and members.size:
+            members = members[candidate_mask[members]]
         if members.size == 0:
             continue
         # §5.2.1: vertices with introversion above the safe threshold are
@@ -234,8 +238,14 @@ def swap_iteration(
     k: int,
     cfg: SwapConfig,
     rng: np.random.Generator,
+    candidate_mask: Optional[np.ndarray] = None,
 ) -> Tuple[np.ndarray, SwapStats]:
     """One internal TAPER iteration of offer/receive vertex swapping.
+
+    ``candidate_mask`` (optional ``(n,)`` bool) seeds the candidate queue
+    from a vertex subset only — used by ``OnlineTaper`` to run
+    mutation-local invocations over the dirty frontier; ``None`` keeps the
+    full paper §3.1 queue.
 
     Produces bit-identical partitions and stats to the seed implementation
     (``repro.core.swap_ref.swap_iteration_reference``), but amortises almost
@@ -269,7 +279,7 @@ def swap_iteration(
     rev_ok = rev >= 0
     rev_c = np.maximum(rev, 0)
 
-    candidates = _candidate_queue(part, field, k, cfg)
+    candidates = _candidate_queue(part, field, k, cfg, candidate_mask)
     moved = np.zeros(n, dtype=bool)
     stats = SwapStats(0, 0, 0, int(candidates.size))
     if candidates.size == 0:

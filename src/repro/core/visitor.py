@@ -205,9 +205,14 @@ def _device_inputs(g: LabelledGraph, pre: Dict, cnt, lab_vcount) -> Dict:
     Cached inside the caller's ``_precomputed`` dict (Taper keeps one per
     graph), so repeated ``invoke`` iterations re-use the same device buffers
     instead of re-uploading the edge list every call.  Only the partition
-    vector crosses host->device per iteration.
+    vector crosses host->device per iteration.  The graph's mutation
+    ``version`` is recorded alongside the buffers: after
+    ``LabelledGraph.apply_mutations`` the stale device-resident edge arrays
+    are detected and re-uploaded rather than silently reused.
     """
     dev = pre.get("_dev")
+    if dev is not None and pre.get("_dev_version") != g.version:
+        dev = None
     if dev is None:
         dev = {
             "src": jnp.asarray(g.src),
@@ -217,6 +222,7 @@ def _device_inputs(g: LabelledGraph, pre: Dict, cnt, lab_vcount) -> Dict:
             "lab_vcount": jnp.asarray(lab_vcount),
         }
         pre["_dev"] = dev
+        pre["_dev_version"] = g.version
     return dev
 
 
@@ -287,6 +293,8 @@ def _pallas_field(
 
     packed, dst_label, inv_cnt_packed, dst_global = g.vm_packing(cnt=cnt)
     pdev = pre.get("_vm_dev")
+    if pdev is not None and pre.get("_vm_dev_version") != g.version:
+        pdev = None  # stale device packing from a pre-mutation graph
     if pdev is None:
         inv_cnt_edge = 1.0 / np.maximum(
             np.asarray(cnt)[g.src, g.labels[g.dst]], 1.0)
@@ -296,6 +304,7 @@ def _pallas_field(
             "inv_cnt_edge": jnp.asarray(inv_cnt_edge.astype(np.float32)),
         }
         pre["_vm_dev"] = pdev
+        pre["_vm_dev_version"] = g.version
 
     # device-resident transition tensor, re-uploaded only when the trie
     # probabilities (or depth cap) change — not per iteration

@@ -1,4 +1,4 @@
-from repro.graphs.graph import LabelledGraph
+from repro.graphs.graph import AppliedMutation, LabelledGraph, MutationBatch
 from repro.graphs.partition import (
     hash_partition,
     metis_like_partition,
@@ -7,7 +7,9 @@ from repro.graphs.partition import (
 from repro.graphs.metrics import edge_cut, partition_balance, partition_sizes
 
 __all__ = [
+    "AppliedMutation",
     "LabelledGraph",
+    "MutationBatch",
     "hash_partition",
     "metis_like_partition",
     "fennel_stream_partition",

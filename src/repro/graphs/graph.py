@@ -1,17 +1,111 @@
-"""Labelled graph container.
+"""Labelled graph container with a versioned mutation/delta model.
 
 The graph is stored once on the host as numpy arrays (CSR + symmetric edge
 list) and exposed to JAX as plain int32/float32 arrays.  All TAPER
 computations are expressed over the *directed, symmetrised* edge list
 ``(src[i], dst[i])`` — an undirected edge appears in both directions, which
 matches the paper's traversal semantics (Gremlin ``both()`` steps).
+
+Dynamic graphs (online TAPER): :meth:`LabelledGraph.apply_mutations` applies
+a batched :class:`MutationBatch` of edge/vertex insertions and deletions
+*in place*, incrementally patching the sorted edge arrays, ``row_ptr``, the
+cached ``reverse_edge_index``, the cached neighbour-label count matrix and
+any cached ``vm_packing`` entries (merge-patch, not rebuild).  Every
+successful batch bumps :attr:`LabelledGraph.version`; consumers holding
+graph-derived state (device-resident buffers in ``repro.core.visitor``, the
+executor's per-query traversal-count cache, ...) compare their recorded
+version against the graph's to detect staleness instead of silently reusing
+stale buffers.  A bounded :attr:`mutation_log` of :class:`AppliedMutation`
+records lets those consumers patch their own state incrementally.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+@dataclass
+class MutationBatch:
+    """A batch of topology mutations, expressed over *undirected* edges.
+
+    Attributes:
+      add_vertex_labels: label ids of brand-new vertices; they receive the
+        next ``len(add_vertex_labels)`` vertex ids (``n .. n+v-1``) and may
+        be referenced by ``add_edges`` in the same batch.
+      add_edges: ``(e, 2)`` undirected edges to insert.  Self loops,
+        already-present edges and edges touching a vertex removed in the
+        same batch are dropped; an endpoint beyond the post-batch vertex
+        range raises ``ValueError``.
+      remove_edges: ``(e, 2)`` undirected edges to delete (absent edges are
+        ignored).
+      remove_vertices: vertex ids to delete.  Deletion *isolates* the vertex
+        — all incident edges are dropped but the id slot and its label
+        remain (a tombstone), so existing vertex ids, partition vectors and
+        per-vertex caches never need renumbering.
+
+    Removals are applied before additions: an edge listed in both ends up
+    present.
+    """
+
+    add_vertex_labels: Sequence[int] = ()
+    add_edges: Sequence = ()
+    remove_edges: Sequence = ()
+    remove_vertices: Sequence[int] = ()
+
+    @property
+    def is_empty(self) -> bool:
+        return not (
+            len(self.add_vertex_labels)
+            or len(self.add_edges)
+            or len(self.remove_edges)
+            or len(self.remove_vertices)
+        )
+
+
+@dataclass
+class AppliedMutation:
+    """Normalised record of one applied :class:`MutationBatch`.
+
+    All edge arrays are *directed* (symmetrised) and describe what actually
+    changed.  ``old2new`` maps every pre-mutation edge position to its
+    post-mutation position (``-1`` if the edge was removed) and
+    ``new_edge_pos`` lists the post-mutation positions of inserted edges —
+    together they let downstream per-edge state (e.g. the executor's
+    traversal counts) be re-indexed without re-deriving the merge.
+    """
+
+    version: int            # graph version after applying (a no-op batch
+                            # leaves it at the pre-call version; see is_noop)
+    n_before: int
+    n_after: int
+    added_src: np.ndarray   # (a,) int32 directed
+    added_dst: np.ndarray   # (a,) int32
+    removed_src: np.ndarray  # (r,) int32 directed
+    removed_dst: np.ndarray  # (r,) int32
+    old2new: np.ndarray     # (m_before,) int64, -1 where removed
+    new_edge_pos: np.ndarray  # (a,) int64 positions of added edges (new order)
+
+    @property
+    def is_noop(self) -> bool:
+        return (
+            self.n_before == self.n_after
+            and self.added_src.size == 0
+            and self.removed_src.size == 0
+        )
+
+    def dirty_vertices(self) -> np.ndarray:
+        """Unique vertex ids whose incident edge set changed (plus brand-new
+        vertices) — the seed frontier for mutation-local TAPER invocations."""
+        parts = [
+            self.added_src.astype(np.int64),
+            self.added_dst.astype(np.int64),
+            self.removed_src.astype(np.int64),
+            self.removed_dst.astype(np.int64),
+            np.arange(self.n_before, self.n_after, dtype=np.int64),
+        ]
+        return np.unique(np.concatenate(parts))
 
 
 @dataclass
@@ -25,7 +119,12 @@ class LabelledGraph:
       src, dst: ``(m,)`` int32 symmetric directed edge list, sorted by
         ``(src, dst)``.
       row_ptr: ``(n+1,)`` int64 CSR offsets into ``dst`` for each ``src``.
+      version: mutation counter — bumped by every effective
+        :meth:`apply_mutations`; lets derived caches detect staleness.
     """
+
+    #: how many AppliedMutation records to retain for incremental consumers
+    MUTATION_LOG_LIMIT = 16
 
     n: int
     labels: np.ndarray
@@ -33,8 +132,11 @@ class LabelledGraph:
     src: np.ndarray
     dst: np.ndarray
     row_ptr: np.ndarray = field(repr=False, default=None)
+    version: int = 0
     _rev_index: Optional[np.ndarray] = field(repr=False, default=None, compare=False)
     _vm_pack_cache: Dict = field(repr=False, default_factory=dict, compare=False)
+    _mutation_log: List[AppliedMutation] = field(
+        repr=False, default_factory=list, compare=False)
 
     def __post_init__(self):
         self.labels = np.asarray(self.labels, dtype=np.int32)
@@ -78,6 +180,17 @@ class LabelledGraph:
             dst=sym[:, 1].astype(np.int32),
         )
 
+    def copy(self) -> "LabelledGraph":
+        """Independent copy with fresh (empty) caches and version 0."""
+        return LabelledGraph(
+            n=self.n,
+            labels=self.labels.copy(),
+            label_names=list(self.label_names),
+            src=self.src.copy(),
+            dst=self.dst.copy(),
+            row_ptr=self.row_ptr.copy(),
+        )
+
     # -- properties --------------------------------------------------------
     @property
     def m(self) -> int:
@@ -92,8 +205,24 @@ class LabelledGraph:
     def degrees(self) -> np.ndarray:
         return (self.row_ptr[1:] - self.row_ptr[:-1]).astype(np.int64)
 
+    @property
+    def mutation_log(self) -> List[AppliedMutation]:
+        return self._mutation_log
+
     def neighbors(self, v: int) -> np.ndarray:
         return self.dst[self.row_ptr[v] : self.row_ptr[v + 1]]
+
+    def edge_indices_of(self, vs: np.ndarray) -> np.ndarray:
+        """Concatenated CSR edge indices of ``vs`` — each vertex's out-edges
+        in CSR order, vertices in the given order."""
+        vs = np.asarray(vs, dtype=np.int64)
+        starts = self.row_ptr[vs]
+        cnts = self.row_ptr[vs + 1] - starts
+        total = int(cnts.sum())
+        if total == 0:
+            return np.empty(0, dtype=np.int64)
+        offs = np.repeat(starts - (np.cumsum(cnts) - cnts), cnts)
+        return offs + np.arange(total, dtype=np.int64)
 
     @property
     def reverse_edge_index(self) -> np.ndarray:
@@ -103,9 +232,9 @@ class LabelledGraph:
         The edge list is sorted by ``(src, dst)``, so the flat keys
         ``src * n + dst`` are ascending and every reverse edge is found with
         one vectorised ``searchsorted`` — no per-edge host loops.  Cached on
-        first use (the graph is immutable after construction); symmetric
-        graphs built via :meth:`from_undirected_edges` always yield a total
-        (no ``-1``) mapping with ``rev[rev] == arange(m)``.
+        first use and *incrementally patched* by :meth:`apply_mutations`;
+        symmetric graphs built via :meth:`from_undirected_edges` always
+        yield a total (no ``-1``) mapping with ``rev[rev] == arange(m)``.
         """
         if self._rev_index is None:
             keys = self.src.astype(np.int64) * self.n + self.dst
@@ -115,6 +244,10 @@ class LabelledGraph:
             found = (keys[pos] == rkeys) if self.m else np.zeros(0, bool)
             self._rev_index = np.where(found, pos, -1).astype(np.int64)
         return self._rev_index
+
+    def is_symmetric(self) -> bool:
+        """True when every directed edge has its reverse present."""
+        return bool((self.reverse_edge_index >= 0).all()) if self.m else True
 
     def vm_packing(self, cnt: Optional[np.ndarray] = None,
                    block_n: int = 128, block_e: int = 256):
@@ -129,16 +262,16 @@ class LabelledGraph:
         zeroed ``inv_cnt`` channel is what neutralises padded slots in the
         kernel.  The packing depends only on the graph (not on
         any partitioning), so it is computed once and reused across every
-        extroversion-field evaluation/iteration.  A non-default ``cnt`` is
-        checked against the cached one — a mismatch rebuilds rather than
-        silently returning channels derived from a different count matrix.
+        extroversion-field evaluation/iteration; :meth:`apply_mutations`
+        merge-patches cached entries block-by-block instead of re-packing.
+        A non-default ``cnt`` is checked against the cached one — a mismatch
+        rebuilds rather than silently returning channels derived from a
+        different count matrix.
         """
         # normalise first so a cnt=None call never aliases an entry built
         # from a custom count matrix (the graph's own counts are cached too)
         if cnt is None:
-            if "_default_cnt" not in self._vm_pack_cache:
-                self._vm_pack_cache["_default_cnt"] = self.neighbor_label_counts()
-            cnt = self._vm_pack_cache["_default_cnt"]
+            cnt = self.cached_neighbor_label_counts()
         key = (int(block_n), int(block_e))
         hit = self._vm_pack_cache.get(key)
         if hit is not None:
@@ -166,8 +299,339 @@ class LabelledGraph:
         cnt = np.bincount(flat, minlength=self.n * self.n_labels)
         return cnt.reshape(self.n, self.n_labels).astype(np.int32)
 
+    def cached_neighbor_label_counts(self) -> np.ndarray:
+        """The graph's own neighbour-label count matrix, built lazily and
+        incrementally patched across mutations (treat as read-only)."""
+        cnt = self._vm_pack_cache.get("_default_cnt")
+        if cnt is None:
+            cnt = self.neighbor_label_counts()
+            self._vm_pack_cache["_default_cnt"] = cnt
+        return cnt
+
     def undirected_edge_count(self) -> int:
         return self.m // 2
+
+    # -- mutation ----------------------------------------------------------
+    def apply_mutations(self, batch: MutationBatch) -> AppliedMutation:
+        """Apply a :class:`MutationBatch` in place; return the normalised
+        :class:`AppliedMutation` record.
+
+        The sorted edge arrays are *merge-patched*: removals become a keep
+        mask, additions are merged by one ``searchsorted`` pass — no
+        re-sort.  ``row_ptr`` is rebuilt from patched degree counts (O(n)),
+        and the cached ``reverse_edge_index``, neighbour-label counts and
+        ``vm_packing`` entries are patched rather than recomputed.  Bumps
+        :attr:`version` and appends to :attr:`mutation_log` unless the batch
+        turns out to be a no-op.
+        """
+        n_old, m_old = self.n, self.m
+        L = self.n_labels
+
+        new_labels = np.asarray(
+            batch.add_vertex_labels, dtype=np.int32).reshape(-1)
+        if new_labels.size and (
+                new_labels.min() < 0 or new_labels.max() >= L):
+            raise ValueError("add_vertex_labels out of label range")
+        n_new = n_old + int(new_labels.size)
+        labels_new = (np.concatenate([self.labels, new_labels])
+                      if new_labels.size else self.labels)
+
+        keys_old = self.src.astype(np.int64) * n_new + self.dst
+        if m_old > 1 and not (np.diff(keys_old) > 0).all():
+            raise ValueError(
+                "apply_mutations requires a deduplicated (src, dst)-sorted "
+                "edge list")
+
+        # ---- removals -> keep mask over old edge positions ---------------
+        removed_vs = (np.unique(np.asarray(
+            batch.remove_vertices, dtype=np.int64).reshape(-1))
+            if len(batch.remove_vertices) else np.empty(0, np.int64))
+        if removed_vs.size and (
+                removed_vs.min() < 0 or removed_vs.max() >= n_new):
+            raise ValueError("remove_vertices out of range")
+
+        rem = np.asarray(batch.remove_edges, dtype=np.int64).reshape(-1, 2)
+        rem_dir = (np.concatenate([rem, rem[:, ::-1]], axis=0)
+                   if rem.size else rem.reshape(0, 2))
+        old_removed_vs = removed_vs[removed_vs < n_old]
+        if old_removed_vs.size:
+            # collect out- AND in-arcs explicitly: on an asymmetric graph a
+            # one-directional in-arc has no stored reverse, so mirroring the
+            # out-edges would leave it dangling on the tombstone
+            out_e = self.edge_indices_of(old_removed_vs)
+            in_e = np.nonzero(np.isin(self.dst, old_removed_vs))[0]
+            eidx = np.unique(np.concatenate([out_e, in_e]))
+            inc = np.stack(
+                [self.src[eidx], self.dst[eidx]], axis=1).astype(np.int64)
+            rem_dir = np.concatenate([rem_dir, inc], axis=0)
+        removed_pos = np.empty(0, np.int64)
+        if rem_dir.size:
+            ok = ((rem_dir >= 0) & (rem_dir < n_new)).all(axis=1)
+            rem_dir = rem_dir[ok]
+            rem_keys = np.unique(rem_dir[:, 0] * n_new + rem_dir[:, 1])
+            if m_old:
+                pos = np.minimum(
+                    np.searchsorted(keys_old, rem_keys), m_old - 1)
+                removed_pos = np.unique(pos[keys_old[pos] == rem_keys])
+        keep = np.ones(m_old, dtype=bool)
+        keep[removed_pos] = False
+        kept_idx = np.nonzero(keep)[0]
+        kept_keys = keys_old[kept_idx]
+
+        # ---- additions -> sorted, deduped, not-already-present -----------
+        add = np.asarray(batch.add_edges, dtype=np.int64).reshape(-1, 2)
+        if add.size:
+            if (add < 0).any() or (add >= n_new).any():
+                raise ValueError(
+                    "add_edges endpoint out of range (did the batch forget "
+                    "matching add_vertex_labels?)")
+            ok = add[:, 0] != add[:, 1]
+            if removed_vs.size:
+                ok &= ~(np.isin(add[:, 0], removed_vs)
+                        | np.isin(add[:, 1], removed_vs))
+            add = add[ok]
+        add_dir = (np.concatenate([add, add[:, ::-1]], axis=0)
+                   if add.size else add.reshape(0, 2))
+        add_keys = (np.unique(add_dir[:, 0] * n_new + add_dir[:, 1])
+                    if add_dir.size else np.empty(0, np.int64))
+        if add_keys.size and kept_keys.size:
+            p = np.minimum(
+                np.searchsorted(kept_keys, add_keys), kept_keys.size - 1)
+            add_keys = add_keys[kept_keys[p] != add_keys]
+        add_s, add_d = np.divmod(add_keys, n_new)
+        a = int(add_keys.size)
+
+        if a == 0 and removed_pos.size == 0 and n_new == n_old:
+            # no effective change: no version bump, no log entry
+            return AppliedMutation(
+                version=self.version, n_before=n_old, n_after=n_old,
+                added_src=np.empty(0, np.int32),
+                added_dst=np.empty(0, np.int32),
+                removed_src=np.empty(0, np.int32),
+                removed_dst=np.empty(0, np.int32),
+                old2new=np.arange(m_old, dtype=np.int64),
+                new_edge_pos=np.empty(0, np.int64),
+            )
+
+        # ---- merge kept + added (one searchsorted, no re-sort) -----------
+        m_new = kept_idx.size + a
+        shift = np.searchsorted(add_keys, kept_keys)   # added keys before kept
+        new_pos_kept = np.arange(kept_idx.size, dtype=np.int64) + shift
+        new_pos_added = (np.searchsorted(kept_keys, add_keys)
+                         + np.arange(a, dtype=np.int64))
+        src_new = np.empty(m_new, dtype=np.int32)
+        dst_new = np.empty(m_new, dtype=np.int32)
+        src_new[new_pos_kept] = self.src[kept_idx]
+        dst_new[new_pos_kept] = self.dst[kept_idx]
+        src_new[new_pos_added] = add_s.astype(np.int32)
+        dst_new[new_pos_added] = add_d.astype(np.int32)
+        old2new = np.full(m_old, -1, dtype=np.int64)
+        old2new[kept_idx] = new_pos_kept
+
+        removed_src = self.src[removed_pos].copy()
+        removed_dst = self.dst[removed_pos].copy()
+
+        # ---- row_ptr from patched degrees (O(n) cumsum) ------------------
+        deg = (self.row_ptr[1:] - self.row_ptr[:-1]).astype(np.int64)
+        if n_new > n_old:
+            deg = np.concatenate([deg, np.zeros(n_new - n_old, np.int64)])
+        if removed_pos.size:
+            deg -= np.bincount(removed_src, minlength=n_new)[:n_new]
+        if a:
+            deg += np.bincount(add_s, minlength=n_new)[:n_new]
+        row_ptr_new = np.concatenate([[0], np.cumsum(deg)]).astype(np.int64)
+
+        # ---- patch cached reverse_edge_index -----------------------------
+        rev_new = None
+        if self._rev_index is not None:
+            rev_old = self._rev_index
+            rev_new = np.full(m_new, -1, dtype=np.int64)
+            r = rev_old[kept_idx]
+            ok = (r >= 0) & keep[np.minimum(np.maximum(r, 0), max(m_old - 1, 0))]
+            rev_new[new_pos_kept[ok]] = old2new[r[ok]]
+            # kept edges whose reverse vanished/appeared + all added edges
+            need = np.concatenate([new_pos_kept[~ok], new_pos_added])
+            if need.size and m_new:
+                keys_new = src_new.astype(np.int64) * n_new + dst_new
+                rk = dst_new[need].astype(np.int64) * n_new + src_new[need]
+                p = np.minimum(np.searchsorted(keys_new, rk), m_new - 1)
+                rev_new[need] = np.where(keys_new[p] == rk, p, -1)
+
+        # ---- patch cached neighbour-label counts -------------------------
+        cnt_old = self._vm_pack_cache.get("_default_cnt")
+        cnt_new = None
+        if cnt_old is not None:
+            if n_new > n_old:
+                cnt_new = np.concatenate(
+                    [cnt_old, np.zeros((n_new - n_old, L), cnt_old.dtype)])
+            else:
+                cnt_new = cnt_old.copy()
+            if removed_pos.size:
+                np.subtract.at(
+                    cnt_new,
+                    (removed_src.astype(np.int64),
+                     labels_new[removed_dst.astype(np.int64)]), 1)
+            if a:
+                np.add.at(cnt_new, (add_s, labels_new[add_d]), 1)
+
+        # ---- patch cached vm_packing entries (block merge-patch) ---------
+        changed_dsts = np.unique(np.concatenate(
+            [removed_dst.astype(np.int64), add_d]))
+        changed_pairs = np.unique(np.concatenate([
+            removed_src.astype(np.int64) * L
+            + labels_new[removed_dst.astype(np.int64)],
+            add_s * L + labels_new[add_d],
+        ]))
+        patched_entries = {}
+        for key, hit in self._vm_pack_cache.items():
+            if key == "_default_cnt":
+                continue
+            cached_cnt, entry = hit
+            patchable = (
+                cnt_new is not None
+                and rev_new is not None
+                and (rev_new >= 0 if m_new else np.ones(0, bool)).all()
+                and (cached_cnt is cnt_old
+                     or np.array_equal(cached_cnt, cnt_old))
+            )
+            if patchable:
+                patched_entries[key] = (cnt_new, self._patch_vm_entry(
+                    key, entry, src_new, dst_new, row_ptr_new, labels_new,
+                    cnt_new, rev_new, n_new, changed_dsts, changed_pairs))
+            # non-patchable entries (custom cnt, asymmetric graph) are
+            # evicted and rebuilt lazily on next use
+
+        # ---- commit ------------------------------------------------------
+        self.n = n_new
+        self.labels = labels_new
+        self.src = src_new
+        self.dst = dst_new
+        self.row_ptr = row_ptr_new
+        self._rev_index = rev_new
+        self._vm_pack_cache = patched_entries
+        if cnt_new is not None:
+            self._vm_pack_cache["_default_cnt"] = cnt_new
+        self.version += 1
+        applied = AppliedMutation(
+            version=self.version,
+            n_before=n_old,
+            n_after=n_new,
+            added_src=add_s.astype(np.int32),
+            added_dst=add_d.astype(np.int32),
+            removed_src=removed_src,
+            removed_dst=removed_dst,
+            old2new=old2new,
+            new_edge_pos=new_pos_added,
+        )
+        self._mutation_log.append(applied)
+        if len(self._mutation_log) > self.MUTATION_LOG_LIMIT:
+            del self._mutation_log[: -self.MUTATION_LOG_LIMIT]
+        return applied
+
+    def _patch_vm_entry(self, key, entry, src_new, dst_new, row_ptr_new,
+                        labels_new, cnt_new, rev_new, n_new,
+                        changed_dsts, changed_pairs):
+        """Merge-patch one cached ``vm_packing`` entry.
+
+        Exploits symmetry: the dst-sorted edge view that ``pack_edges``
+        builds is exactly the swapped raw arrays (the j-th ``(dst, src)``
+        pair in sorted order is the j-th raw ``(src, dst)`` pair with roles
+        exchanged), and its sort permutation is the reverse-edge involution.
+        Only dst-blocks containing a mutated endpoint are re-packed; the
+        rest are copied slice-wise, with ``inv_cnt`` refreshed for slots
+        whose ``(src, dst-label)`` count changed.
+        """
+        import jax.numpy as jnp
+
+        bn, be = key
+        packed_old, dst_label_old, inv_cnt_old, _ = entry
+        nb_old = packed_old.n_blocks_out
+        nb_new = (n_new + bn - 1) // bn
+
+        aff = np.unique(np.concatenate([
+            changed_dsts // bn, np.arange(nb_old, nb_new, dtype=np.int64)]))
+        aff = aff[aff < nb_new]
+        aff_mask = np.zeros(nb_new, dtype=bool)
+        aff_mask[aff] = True
+
+        old_eb = np.bincount(packed_old.meta[:, 0], minlength=nb_old)
+        new_eb = np.zeros(nb_new, dtype=np.int64)
+        new_eb[:min(nb_old, nb_new)] = old_eb[:min(nb_old, nb_new)]
+        # per-block real edge counts from the new CSR (in-deg == out-deg)
+        v_hi = np.minimum((aff + 1) * bn, n_new)
+        blk_cnt = row_ptr_new[v_hi] - row_ptr_new[np.minimum(aff * bn, n_new)]
+        new_eb[aff] = np.maximum(1, -(-blk_cnt // be))
+        old_off = np.concatenate([[0], np.cumsum(old_eb)]) * be
+        new_off = np.concatenate([[0], np.cumsum(new_eb)]) * be
+        e_pad = int(new_off[-1])
+
+        src_p = np.zeros(e_pad, dtype=np.int32)
+        dloc_p = np.zeros(e_pad, dtype=np.int32)
+        mask_p = np.zeros(e_pad, dtype=bool)
+        dlab_p = np.zeros(e_pad, dtype=np.int32)
+        inv_p = np.zeros(e_pad, dtype=np.float32)
+
+        o_src = np.asarray(packed_old.src)
+        o_dloc = np.asarray(packed_old.dst_local)
+        o_mask = np.asarray(packed_old.pad_mask)
+        o_dlab = np.asarray(dst_label_old)
+        o_inv = np.asarray(inv_cnt_old)
+
+        # copy runs of unaffected blocks wholesale
+        b = 0
+        while b < min(nb_old, nb_new):
+            if aff_mask[b]:
+                b += 1
+                continue
+            e = b
+            while e < min(nb_old, nb_new) and not aff_mask[e]:
+                e += 1
+            slo, shi = int(old_off[b]), int(old_off[e])
+            dlo = int(new_off[b])
+            span = shi - slo
+            src_p[dlo:dlo + span] = o_src[slo:shi]
+            dloc_p[dlo:dlo + span] = o_dloc[slo:shi]
+            mask_p[dlo:dlo + span] = o_mask[slo:shi]
+            dlab_p[dlo:dlo + span] = o_dlab[slo:shi]
+            inv_p[dlo:dlo + span] = o_inv[slo:shi]
+            b = e
+
+        # rebuild affected blocks from the swapped raw arrays
+        for blk in aff.tolist():
+            vlo, vhi_b = blk * bn, min((blk + 1) * bn, n_new)
+            lo, hi = int(row_ptr_new[vlo]), int(row_ptr_new[vhi_b])
+            c = hi - lo
+            o = int(new_off[blk])
+            if c:
+                src_p[o:o + c] = dst_new[lo:hi]
+                dloc_p[o:o + c] = src_new[lo:hi] - vlo
+                mask_p[o:o + c] = True
+                dlab_p[o:o + c] = labels_new[src_new[lo:hi]]
+                inv_p[o:o + c] = 1.0 / np.maximum(
+                    cnt_new[dst_new[lo:hi], labels_new[src_new[lo:hi]]], 1.0)
+
+        # refresh inv_cnt where the (src, dst-label) count changed
+        if changed_pairs.size:
+            slot_keys = src_p.astype(np.int64) * self.n_labels + dlab_p
+            upd = mask_p & np.isin(slot_keys, changed_pairs)
+            if upd.any():
+                inv_p[upd] = 1.0 / np.maximum(
+                    cnt_new[src_p[upd], dlab_p[upd]], 1.0)
+
+        meta = np.zeros((int(new_eb.sum()), 2), dtype=np.int32)
+        meta[:, 0] = np.repeat(
+            np.arange(nb_new, dtype=np.int64), new_eb).astype(np.int32)
+        firsts = np.concatenate([[0], np.cumsum(new_eb)[:-1]])
+        meta[firsts, 1] = 1
+
+        from repro.kernels.segment_spmm.ops import PackedEdges
+
+        packed_new = PackedEdges(
+            src=src_p, dst_local=dloc_p, meta=meta, pad_mask=mask_p,
+            order=rev_new, n_blocks_out=int(nb_new), block_n=bn, block_e=be)
+        dst_global = (np.repeat(meta[:, 0], be) * bn + dloc_p).astype(np.int32)
+        return (packed_new, jnp.asarray(dlab_p), jnp.asarray(inv_p),
+                dst_global)
 
     def subgraph_mask(self, vmask: np.ndarray) -> "LabelledGraph":
         """Induced subgraph on the vertices where ``vmask`` is True.

@@ -7,10 +7,21 @@ import numpy as np
 from repro.graphs.graph import LabelledGraph
 
 
-def edge_cut(g: LabelledGraph, part: np.ndarray) -> int:
-    """Number of undirected edges crossing partitions."""
+def edge_cut(g: LabelledGraph, part: np.ndarray, directed: bool = False) -> int:
+    """Number of edges crossing partitions.
+
+    ``directed=True`` counts cut *arcs* — every stored directed edge whose
+    endpoints differ.  ``directed=False`` (default) counts each undirected
+    pair once; arcs without a stored reverse still count once each (the old
+    implementation's blanket ``// 2`` silently halved those).
+    """
     cut = part[g.src] != part[g.dst]
-    return int(cut.sum() // 2)
+    if directed:
+        return int(cut.sum())
+    # count each symmetric pair at its (src < dst) arc; one-directional
+    # arcs (no stored reverse) are their own representative
+    once = (g.src < g.dst) | (g.reverse_edge_index < 0)
+    return int((cut & once).sum())
 
 
 def partition_sizes(part: np.ndarray, k: int) -> np.ndarray:

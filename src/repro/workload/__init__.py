@@ -1,9 +1,15 @@
 from repro.workload.sketch import FrequencySketch
-from repro.workload.stream import WorkloadStream, periodic_frequencies, linear_drift
+from repro.workload.stream import (
+    GraphMutationStream,
+    WorkloadStream,
+    periodic_frequencies,
+    linear_drift,
+)
 from repro.workload.executor import QueryExecutor, ipt_of_partition
 
 __all__ = [
     "FrequencySketch",
+    "GraphMutationStream",
     "WorkloadStream",
     "periodic_frequencies",
     "linear_drift",

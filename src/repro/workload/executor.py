@@ -8,101 +8,225 @@ The executor enumerates (by counting, not materialising) every traversal a
 pattern-matching engine would perform: a path instance `v_1 ... v_j` whose
 label string is a prefix of some string in str(Q) causes one traversal per
 extension edge.  Counting is a DP over (vertex, trie-node) states — the
-integer twin of the Visitor-Matrix probability DP.
+integer twin of the Visitor-Matrix probability DP — run in float64 numpy so
+results are deterministic (bit-identical across full rebuild and the
+incremental path below).
 
 Because per-edge traversal counts depend only on (graph, query) — not on the
 partitioning — they are computed once and cached; `ipt` for any partitioning
-is then a masked sum over cut edges.  Path materialisation (for the serving
-engine) is a separate bounded enumeration.
+is then a masked sum over cut edges.  Under topology mutations
+(``LabelledGraph.apply_mutations``) the cache is *delta-aware*: the DP state
+(per-(vertex, trie-node) path counts plus per-edge traversal counts) is
+patched by re-deriving only the states and edges whose (src-state,
+dst-label) contributions changed — the dirty set is propagated depth by
+depth from the mutated endpoints, so a small mutation batch costs
+O(affected neighbourhood), not a full DP over the graph.  Path
+materialisation (for the serving engine) is a separate bounded enumeration.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.rpq import RPQ
 from repro.core.tpstry import TPSTry, TrieArrays
-from repro.graphs.graph import LabelledGraph
+from repro.graphs.graph import AppliedMutation, LabelledGraph
 from repro.utils import get_logger
 
 log = get_logger("workload.executor")
 
 
-@partial(jax.jit, static_argnames=("n", "m", "n_trie", "depth1_key", "steps_key"))
-def _traversal_counts(
-    src, dst, vlabels, *, n: int, m: int, n_trie: int, depth1_key, steps_key
-):
-    """Per-edge traversal counts for one compiled trie.
+@dataclass
+class _CountState:
+    """Cached DP state for one (graph version, query)."""
 
-    depth1_key: tuple of (node_id, label_id) for depth-1 nodes;
-    steps_key: tuple of (node_id, parent_id, label_id) for depth>=2 nodes in
-    depth order.  Both static, baked into the trace.
-    """
-    dst_lab = vlabels[dst]
-    depth1 = dict(depth1_key)
-    counts = []
-    for i in range(n_trie):
-        if i in depth1:
-            counts.append((vlabels == depth1[i]).astype(jnp.float32))
-        else:
-            counts.append(jnp.zeros((n,), jnp.float32))
-    cnt = jnp.stack(counts, axis=1) if n_trie else jnp.zeros((n, 0), jnp.float32)
+    version: int
+    trav: np.ndarray          # (m,) float64 per-edge traversal counts
+    cnt: np.ndarray           # (n, N) float64 per-(vertex, trie-node) counts
+    depth1: List[Tuple[int, int]]   # (node, label) for depth-1 nodes
+    steps: List[Tuple[int, int, int]]  # (node, parent, label), depth order
 
-    trav = jnp.zeros((m,), jnp.float32)
-    for (c, par, lc) in steps_key:
-        contrib = cnt[src, par] * (dst_lab == lc).astype(jnp.float32)
-        trav = trav + contrib
-        cnt = cnt.at[:, c].add(jax.ops.segment_sum(contrib, dst, num_segments=n))
-    return trav
+
+def _count_full(g: LabelledGraph, depth1, steps, n_trie: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Full traversal-count DP over the whole edge list (the rebuild path)."""
+    n, m = g.n, g.m
+    cnt = np.zeros((n, n_trie), dtype=np.float64)
+    for i, li in depth1:
+        cnt[:, i] = (g.labels == li).astype(np.float64)
+    trav = np.zeros(m, dtype=np.float64)
+    src, dst = g.src, g.dst
+    lab_dst = g.labels[dst]
+    for c, par, lc in steps:
+        contrib = cnt[src, par] * (lab_dst == lc)
+        trav += contrib
+        if m:
+            cnt[:, c] += np.bincount(dst, weights=contrib, minlength=n)[:n]
+    return trav, cnt
 
 
 class QueryExecutor:
-    """Caches per-query per-edge traversal counts for a graph."""
+    """Caches per-query per-edge traversal counts for a graph.
+
+    The cache follows the graph's mutation ``version``: a stale entry is
+    patched incrementally from ``LabelledGraph.mutation_log`` when the log
+    still covers the gap (and the graph is symmetric, so in-edges can be
+    enumerated through ``reverse_edge_index``), and rebuilt from scratch
+    otherwise.  Both paths produce bit-identical counts.
+    """
 
     def __init__(self, g: LabelledGraph, star_max: int = 3, max_len: Optional[int] = None):
         self.g = g
         self.star_max = star_max
         self.max_len = max_len
-        self._cache: Dict[str, np.ndarray] = {}
+        self._cache: Dict[str, _CountState] = {}
 
     def traversals(self, q: RPQ) -> np.ndarray:
         """(m,) float64 — number of times each directed edge is traversed
         when fully evaluating ``q`` over the graph."""
         qh = q.qhash
-        if qh not in self._cache:
-            trie = TPSTry.from_workload(
-                [(q, 1.0)], max_len=self.max_len, star_max=self.star_max
-            ).compile(self.g.label_names)
-            self._cache[qh] = self._count(trie)
-        return self._cache[qh]
+        state = self._cache.get(qh)
+        if state is not None and state.version == self.g.version:
+            return state.trav
+        if state is not None:
+            patched = self._patch(state)
+            if patched is not None:
+                self._cache[qh] = patched
+                return patched.trav
+        self._cache[qh] = self._build(q)
+        return self._cache[qh].trav
 
-    def _count(self, trie: TrieArrays) -> np.ndarray:
-        steps_key = tuple(
-            (int(i), int(trie.parent[i]), int(trie.label[i]))
-            for i in range(trie.n_nodes)
-            if trie.depth[i] >= 2
-        )
-        depth1_key = tuple(
+    def _compile(self, q: RPQ) -> TrieArrays:
+        return TPSTry.from_workload(
+            [(q, 1.0)], max_len=self.max_len, star_max=self.star_max
+        ).compile(self.g.label_names)
+
+    def _build(self, q: RPQ) -> _CountState:
+        trie = self._compile(q)
+        depth1 = [
             (int(i), int(trie.label[i]))
             for i in range(trie.n_nodes)
             if trie.depth[i] == 1
-        )
-        trav = _traversal_counts(
-            jnp.asarray(self.g.src),
-            jnp.asarray(self.g.dst),
-            jnp.asarray(self.g.labels),
-            n=self.g.n,
-            m=self.g.m,
-            n_trie=trie.n_nodes,
-            depth1_key=depth1_key,
-            steps_key=steps_key,
-        )
-        return np.asarray(trav, dtype=np.float64)
+        ]
+        steps = [
+            (int(i), int(trie.parent[i]), int(trie.label[i]))
+            for i in range(trie.n_nodes)
+            if trie.depth[i] >= 2
+        ]
+        trav, cnt = _count_full(self.g, depth1, steps, trie.n_nodes)
+        return _CountState(self.g.version, trav, cnt, depth1, steps)
+
+    # -- incremental maintenance ----------------------------------------------
+    def _covering_mutations(self, version: int) -> Optional[List[AppliedMutation]]:
+        """The contiguous mutation-log slice taking ``version`` to the
+        graph's current version, or None if the log no longer covers it."""
+        entries = [e for e in self.g.mutation_log
+                   if version < e.version <= self.g.version]
+        if not entries:
+            return None
+        versions = [e.version for e in entries]
+        if versions[0] != version + 1 or versions[-1] != self.g.version:
+            return None
+        if versions != list(range(versions[0], versions[-1] + 1)):
+            return None
+        return entries
+
+    def _patch(self, state: _CountState) -> Optional[_CountState]:
+        """Patch a stale DP state across the mutation gap, or None to force
+        a rebuild.
+
+        The patch never needs the intermediate graph snapshots: the per-edge
+        index maps of the covered mutations compose into one old->new map,
+        the structural endpoints union into one dirty seed set, and every
+        affected quantity is then re-derived against the *final* arrays —
+        per trie node, the (vertex, node) counts of affected destinations
+        are recomputed from their in-edges (through ``reverse_edge_index``,
+        in ascending edge order, matching ``np.bincount``'s accumulation
+        order so the result is bit-identical to a full rebuild), and dirty
+        destinations propagate to the next depth only when the recomputed
+        value actually changed.
+        """
+        g = self.g
+        entries = self._covering_mutations(state.version)
+        if entries is None:
+            return None
+        if not g.is_symmetric():
+            return None  # need total rev index to enumerate in-edges
+        n_new, m_new = g.n, g.m
+        n_before = entries[0].n_before
+
+        # compose old->new edge index maps across the gap
+        old2new = entries[0].old2new
+        for e in entries[1:]:
+            valid = old2new >= 0
+            nxt = np.full(old2new.shape[0], -1, dtype=np.int64)
+            nxt[valid] = e.old2new[old2new[valid]]
+            old2new = nxt
+        surv_old = np.nonzero(old2new >= 0)[0]
+        surv_new = old2new[surv_old]
+        # edges with no pre-gap ancestor are "added" w.r.t. the cached state
+        is_mapped = np.zeros(m_new, dtype=bool)
+        is_mapped[surv_new] = True
+        added_pos = np.nonzero(~is_mapped)[0]
+
+        # structural dirty endpoints (vertex ids are stable across versions)
+        seed_dst: List[np.ndarray] = [g.dst[added_pos].astype(np.int64)]
+        for e in entries:
+            seed_dst.append(e.removed_dst.astype(np.int64))
+        seed_dst_all = np.unique(np.concatenate(seed_dst)) if seed_dst else \
+            np.empty(0, np.int64)
+        seed_dst_all = seed_dst_all[seed_dst_all < n_new]
+
+        N = state.cnt.shape[1]
+        trav = np.zeros(m_new, dtype=np.float64)
+        trav[surv_new] = state.trav[surv_old]
+        cnt = np.zeros((n_new, N), dtype=np.float64)
+        cnt[:n_before] = state.cnt
+        changed = np.zeros((n_new, N), dtype=bool)
+        labels = g.labels
+        for i, li in state.depth1:
+            cnt[n_before:, i] = (labels[n_before:] == li).astype(np.float64)
+        changed[n_before:, :] = True  # brand-new vertices: conservative
+
+        rev = g.reverse_edge_index
+        src, dst = g.src, g.dst
+        touched: List[np.ndarray] = [added_pos]
+        for c, par, lc in state.steps:
+            dirty_src = np.nonzero(changed[:, par])[0]
+            eidx = g.edge_indices_of(dirty_src) if dirty_src.size else \
+                np.empty(0, np.int64)
+            if eidx.size:
+                eidx = eidx[labels[dst[eidx]] == lc]
+            if eidx.size:
+                touched.append(eidx)
+            aff_v = np.unique(np.concatenate([
+                dst[eidx].astype(np.int64),
+                seed_dst_all[labels[seed_dst_all] == lc],
+            ]))
+            if aff_v.size == 0:
+                continue
+            in_pos = rev[g.edge_indices_of(aff_v)]
+            # per-destination in-edge sums, ascending edge order per bin
+            # (identical accumulation order to the full DP's bincount)
+            newvals = np.bincount(
+                dst[in_pos], weights=cnt[src[in_pos], par], minlength=n_new
+            )[aff_v] if in_pos.size else np.zeros(aff_v.size)
+            upd = newvals != cnt[aff_v, c]
+            changed[aff_v[upd], c] = True
+            cnt[aff_v, c] = newvals
+
+        # re-derive full traversal counts for every touched edge, summing
+        # node contributions in the same (depth) order as the full DP
+        eall = np.unique(np.concatenate(touched)) if touched else \
+            np.empty(0, np.int64)
+        if eall.size:
+            t = np.zeros(eall.size, dtype=np.float64)
+            s_e, lab_e = src[eall], labels[dst[eall]]
+            for c, par, lc in state.steps:
+                t += cnt[s_e, par] * (lab_e == lc)
+            trav[eall] = t
+        return _CountState(g.version, trav, cnt, state.depth1, state.steps)
 
     # -- metrics ---------------------------------------------------------------
     def ipt(self, q: RPQ, part: np.ndarray) -> float:
@@ -131,9 +255,7 @@ class QueryExecutor:
         paths only (the serving engine's per-request accounting).
         """
         g = self.g
-        trie = TPSTry.from_workload(
-            [(q, 1.0)], max_len=self.max_len, star_max=self.star_max
-        ).compile(g.label_names)
+        trie = self._compile(q)
         # terminal nodes: label strings in str(Q) == nodes whose path is a
         # complete string; conservatively: leaves, plus any node marked by
         # string set membership

@@ -1,0 +1,223 @@
+"""Dynamic-graph subsystem: mutation semantics + incremental-maintenance
+parity (patched caches must be bit-identical to rebuild-from-scratch)."""
+import numpy as np
+import pytest
+
+from repro.core.rpq import parse_rpq
+from repro.graphs.generators import musicbrainz_like, power_law_labelled
+from repro.graphs.graph import LabelledGraph, MutationBatch
+from repro.workload.executor import QueryExecutor
+
+
+def _rebuilt(g: LabelledGraph) -> LabelledGraph:
+    """Fresh graph constructed from g's raw arrays (full re-sort path)."""
+    return LabelledGraph(
+        n=g.n, labels=g.labels.copy(), label_names=list(g.label_names),
+        src=g.src.copy(), dst=g.dst.copy())
+
+
+def _assert_full_parity(g: LabelledGraph, queries=()):
+    """Every incrementally-maintained structure == scratch rebuild, bitwise."""
+    g2 = _rebuilt(g)
+    assert np.array_equal(g.src, g2.src)
+    assert np.array_equal(g.dst, g2.dst)
+    assert np.array_equal(g.row_ptr, g2.row_ptr)
+    assert np.array_equal(g.reverse_edge_index, g2.reverse_edge_index)
+    assert np.array_equal(
+        g.cached_neighbor_label_counts(), g2.neighbor_label_counts())
+    p1, dl1, ic1, dg1 = g.vm_packing()
+    p2, dl2, ic2, dg2 = g2.vm_packing()
+    assert p1.n_blocks_out == p2.n_blocks_out
+    for a, b in [
+        (p1.src, p2.src), (p1.dst_local, p2.dst_local), (p1.meta, p2.meta),
+        (p1.pad_mask, p2.pad_mask), (p1.order, p2.order),
+        (np.asarray(dl1), np.asarray(dl2)),
+        (np.asarray(ic1), np.asarray(ic2)), (dg1, dg2),
+    ]:
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for ex, q in queries:
+        assert np.array_equal(ex.traversals(q), QueryExecutor(g).traversals(q))
+
+
+def _seed_caches(g: LabelledGraph):
+    g.reverse_edge_index
+    g.cached_neighbor_label_counts()
+    g.vm_packing()
+
+
+# ---------------------------------------------------------------------------
+# mutation semantics
+# ---------------------------------------------------------------------------
+
+
+def test_add_and_remove_edges(paper_graph):
+    g = paper_graph.subgraph_mask(np.ones(6, bool))  # private copy
+    _seed_caches(g)
+    m0, v0 = g.m, g.version
+    applied = g.apply_mutations(MutationBatch(
+        add_edges=[(0, 5)], remove_edges=[(1, 2)]))
+    assert g.version == v0 + 1
+    assert g.m == m0  # one undirected edge in, one out
+    assert 5 in g.neighbors(0) and 2 not in g.neighbors(1)
+    assert applied.added_src.size == 2 and applied.removed_src.size == 2
+    _assert_full_parity(g)
+
+
+def test_add_vertices_with_edges(paper_graph):
+    g = paper_graph.subgraph_mask(np.ones(6, bool))
+    _seed_caches(g)
+    applied = g.apply_mutations(MutationBatch(
+        add_vertex_labels=[2, 0], add_edges=[(6, 0), (6, 7), (7, 3)]))
+    assert g.n == 8 and applied.n_after == 8
+    assert sorted(g.neighbors(6).tolist()) == [0, 7]
+    assert g.labels[6] == 2 and g.labels[7] == 0
+    assert np.isin(np.arange(6, 8), applied.dirty_vertices()).all()
+    _assert_full_parity(g)
+
+
+def test_remove_vertex_isolates_tombstone(paper_graph):
+    g = paper_graph.subgraph_mask(np.ones(6, bool))
+    _seed_caches(g)
+    lab = int(g.labels[1])
+    g.apply_mutations(MutationBatch(remove_vertices=[1]))
+    assert g.n == 6                       # slot remains
+    assert g.neighbors(1).size == 0       # but isolated
+    assert int(g.labels[1]) == lab        # label kept
+    assert not np.isin(1, g.dst).any()
+    _assert_full_parity(g)
+
+
+def test_remove_vertex_drops_one_directional_in_arcs():
+    """Asymmetric storage: a tombstoned vertex must lose in-arcs that have
+    no stored reverse, not just its out-edges."""
+    g = LabelledGraph(
+        n=4, labels=[0, 0, 1, 1], label_names=["a", "b"],
+        src=np.array([0, 1, 2], dtype=np.int32),
+        dst=np.array([1, 2, 3], dtype=np.int32))
+    g.apply_mutations(MutationBatch(remove_vertices=[1]))
+    assert not np.isin(1, g.src).any() and not np.isin(1, g.dst).any()
+    assert g.m == 1  # only (2, 3) survives
+
+
+def test_noop_batch_does_not_bump_version(paper_graph):
+    g = paper_graph.subgraph_mask(np.ones(6, bool))
+    v0 = g.version
+    applied = g.apply_mutations(MutationBatch(
+        add_edges=[(0, 1)],          # already present
+        remove_edges=[(0, 5)]))      # absent
+    assert applied.is_noop and g.version == v0
+    assert len(g.mutation_log) == 0
+
+
+def test_out_of_range_add_edge_raises(paper_graph):
+    g = paper_graph.subgraph_mask(np.ones(6, bool))
+    with pytest.raises(ValueError, match="out of range"):
+        # references vertex 6 without a matching add_vertex_labels entry
+        g.apply_mutations(MutationBatch(add_edges=[(0, 6)]))
+
+
+def test_duplicate_and_self_loop_additions_dropped(paper_graph):
+    g = paper_graph.subgraph_mask(np.ones(6, bool))
+    m0 = g.m
+    g.apply_mutations(MutationBatch(add_edges=[(0, 0), (0, 5), (5, 0)]))
+    assert g.m == m0 + 2  # one undirected edge, stored twice
+    _assert_full_parity(g)
+
+
+def test_stale_vm_packing_not_served(paper_graph):
+    """Stale derived caches must be refreshed, not silently reused."""
+    g = paper_graph.subgraph_mask(np.ones(6, bool))
+    _seed_caches(g)
+    before = g.vm_packing()
+    g.apply_mutations(MutationBatch(add_edges=[(0, 5)]))
+    after = g.vm_packing()
+    assert after[0].src.shape != before[0].src.shape or not np.array_equal(
+        np.asarray(after[0].src), np.asarray(before[0].src))
+
+
+# ---------------------------------------------------------------------------
+# executor delta-aware cache
+# ---------------------------------------------------------------------------
+
+
+def test_executor_patch_matches_rebuild():
+    g = musicbrainz_like(2000, seed=3)
+    q = parse_rpq("Artist.Credit.Track.Medium")
+    ex = QueryExecutor(g)
+    ex.traversals(q)
+    rng = np.random.default_rng(0)
+    und = np.stack([g.src, g.dst], 1)
+    und = und[und[:, 0] < und[:, 1]]
+    g.apply_mutations(MutationBatch(
+        add_vertex_labels=rng.integers(0, g.n_labels, 4),
+        add_edges=np.stack([rng.integers(0, g.n + 4, 30),
+                            rng.integers(0, g.n + 4, 30)], 1),
+        remove_edges=und[rng.choice(len(und), 20, replace=False)]))
+    patched = ex.traversals(q)
+    scratch = QueryExecutor(g).traversals(q)
+    assert np.array_equal(patched, scratch)
+
+
+def test_executor_patch_across_multiple_batches():
+    g = musicbrainz_like(1500, seed=4)
+    q = parse_rpq("Area.Artist.(Artist|Label).Area")
+    ex = QueryExecutor(g)
+    ex.traversals(q)
+    rng = np.random.default_rng(1)
+    for _ in range(3):  # gap of 3 versions, patched in one composed hop
+        g.apply_mutations(MutationBatch(
+            add_edges=np.stack([rng.integers(0, g.n, 15),
+                                rng.integers(0, g.n, 15)], 1)))
+    assert np.array_equal(ex.traversals(q), QueryExecutor(g).traversals(q))
+
+
+def test_executor_rebuilds_when_log_expired():
+    g = musicbrainz_like(1000, seed=5)
+    q = parse_rpq("Artist.Credit.Track.Medium")
+    ex = QueryExecutor(g)
+    ex.traversals(q)
+    rng = np.random.default_rng(2)
+    for _ in range(g.MUTATION_LOG_LIMIT + 2):  # overflow the log
+        g.apply_mutations(MutationBatch(
+            add_edges=np.stack([rng.integers(0, g.n, 4),
+                                rng.integers(0, g.n, 4)], 1)))
+    assert np.array_equal(ex.traversals(q), QueryExecutor(g).traversals(q))
+
+
+# ---------------------------------------------------------------------------
+# randomized MutationBatch parity (the acceptance gate); the hypothesis
+# twin with minimisation lives in tests/test_property_dynamic.py
+# ---------------------------------------------------------------------------
+
+
+def _random_batch(g, rng, nv, na, nr, rem_v):
+    und = np.stack([g.src, g.dst], 1)
+    und = und[und[:, 0] < und[:, 1]]
+    nr = min(nr, len(und))
+    remove = (und[rng.choice(len(und), nr, replace=False)]
+              if nr else np.zeros((0, 2), np.int64))
+    hi = g.n + nv
+    add = (np.stack([rng.integers(0, hi, na), rng.integers(0, hi, na)], 1)
+           if na else np.zeros((0, 2), np.int64))
+    return MutationBatch(
+        add_vertex_labels=rng.integers(0, g.n_labels, nv),
+        add_edges=add, remove_edges=remove, remove_vertices=rem_v)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_mutation_batches_bitwise_parity(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(40, 250))
+    g = power_law_labelled(n, n_labels=4, avg_degree=5.0, seed=seed)
+    q = parse_rpq("L0.(L1|L2).L3")
+    _seed_caches(g)
+    ex = QueryExecutor(g)
+    ex.traversals(q)
+    for _ in range(int(rng.integers(1, 4))):
+        rem_v = [int(rng.integers(0, g.n))] if rng.random() < 0.5 else []
+        g.apply_mutations(_random_batch(
+            g, rng,
+            nv=int(rng.integers(0, 5)), na=int(rng.integers(0, 13)),
+            nr=int(rng.integers(0, 13)), rem_v=rem_v))
+        g.validate()
+        _assert_full_parity(g, queries=[(ex, q)])

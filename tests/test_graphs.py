@@ -71,6 +71,29 @@ def test_fennel_beats_hash():
     assert edge_cut(g, fennel_p) < edge_cut(g, hash_p)
 
 
+def test_edge_cut_undirected_vs_directed(paper_graph):
+    part = np.array([0, 0, 1, 0, 1, 1], dtype=np.int32)  # A/B of Fig.1
+    und = edge_cut(paper_graph, part)                # symmetric storage
+    dir_ = edge_cut(paper_graph, part, directed=True)
+    assert dir_ == 2 * und                           # every pair stored twice
+    cut_pairs = {(1, 2), (1, 4), (2, 3), (3, 4)}     # by hand from Fig. 1
+    assert und == len(cut_pairs)
+
+
+def test_edge_cut_one_directional_arcs_not_halved():
+    """A directed graph stored one-direction-per-edge: the old ``// 2``
+    silently halved the cut; both modes must count each arc once."""
+    from repro.graphs.graph import LabelledGraph
+
+    g = LabelledGraph(
+        n=4, labels=[0, 0, 1, 1], label_names=["a", "b"],
+        src=np.array([0, 1, 2], dtype=np.int32),
+        dst=np.array([1, 2, 3], dtype=np.int32))
+    part = np.array([0, 1, 0, 1], dtype=np.int32)    # all three arcs cut
+    assert edge_cut(g, part, directed=True) == 3
+    assert edge_cut(g, part) == 3                    # no reverse arcs stored
+
+
 def test_subgraph_mask(paper_graph):
     sub = paper_graph.subgraph_mask(np.array([0, 0, 1, 0, 1, 1], dtype=bool))
     assert sub.n == 3

@@ -1,0 +1,201 @@
+"""OnlineTaper driver, GraphMutationStream scenarios, frontier-seeded swaps."""
+import numpy as np
+import pytest
+
+from repro.core.online import OnlinePolicy, OnlineTaper
+from repro.core.rpq import parse_rpq
+from repro.core.swap import SwapConfig, swap_iteration
+from repro.core.taper import Taper, TaperConfig
+from repro.core.tpstry import TPSTry
+from repro.core.visitor import extroversion_field
+from repro.graphs.generators import musicbrainz_like, power_law_labelled
+from repro.graphs.graph import MutationBatch
+from repro.graphs.metrics import partition_balance
+from repro.graphs.partition import hash_partition
+from repro.workload.executor import QueryExecutor
+from repro.workload.stream import GraphMutationStream, WorkloadStream
+
+MQ1 = parse_rpq("Area.Artist.(Artist|Label).Area")
+MQ3 = parse_rpq("Artist.Credit.Track.Medium")
+
+
+def _workload():
+    return [(MQ1, 0.5), (MQ3, 0.5)]
+
+
+# ---------------------------------------------------------------------------
+# GraphMutationStream
+# ---------------------------------------------------------------------------
+
+
+def test_mutation_stream_grow():
+    g = musicbrainz_like(1000, seed=1)
+    s = GraphMutationStream(mode="grow", vertices_per_tick=5, seed=0)
+    n0, m0 = g.n, g.m
+    g.apply_mutations(s.next_batch(g))
+    assert g.n == n0 + 5
+    assert g.m > m0
+
+
+def test_mutation_stream_churn_keeps_size():
+    g = musicbrainz_like(1000, seed=1)
+    s = GraphMutationStream(mode="churn", edges_per_tick=10, seed=0)
+    n0 = g.n
+    g.apply_mutations(s.next_batch(g))
+    assert g.n == n0  # churn never grows the vertex set
+
+
+def test_mutation_stream_burst_quiet_then_spike():
+    g = musicbrainz_like(800, seed=2)
+    s = GraphMutationStream(mode="burst", burst_every=3, seed=0)
+    assert s.next_batch(g).is_empty
+    assert s.next_batch(g).is_empty
+    spike = s.next_batch(g)
+    assert not spike.is_empty
+    assert len(spike.add_vertex_labels) > 0
+
+
+def test_mutation_stream_deterministic():
+    g1 = musicbrainz_like(800, seed=3)
+    g2 = musicbrainz_like(800, seed=3)
+    s1 = GraphMutationStream(mode="mixed", seed=9)
+    s2 = GraphMutationStream(mode="mixed", seed=9)
+    b1, b2 = s1.next_batch(g1), s2.next_batch(g2)
+    assert np.array_equal(np.asarray(b1.add_edges), np.asarray(b2.add_edges))
+    assert np.array_equal(
+        np.asarray(b1.remove_edges), np.asarray(b2.remove_edges))
+
+
+# ---------------------------------------------------------------------------
+# frontier-seeded swap queue
+# ---------------------------------------------------------------------------
+
+
+def test_candidate_mask_restricts_moves():
+    g = power_law_labelled(300, n_labels=4, avg_degree=5.0, seed=7)
+    k = 3
+    part = hash_partition(g.n, k, seed=1)
+    trie = TPSTry.from_workload(
+        [(parse_rpq("L0.(L1|L2).L3"), 1.0)]).compile(g.label_names)
+    fld = extroversion_field(g, trie, part, k)
+    allowed = np.zeros(g.n, dtype=bool)
+    allowed[: g.n // 10] = True
+    new_part, stats = swap_iteration(
+        g, part, fld, k, SwapConfig(), np.random.default_rng(0),
+        candidate_mask=allowed)
+    moved = np.nonzero(new_part != part)[0]
+    # singleton moves come only from the mask; families may drag 1-hop
+    # members along, so every move is within one hop of the mask
+    for v in moved:
+        assert allowed[v] or allowed[g.neighbors(v)].any()
+
+
+def test_taper_invoke_frontier_smoke():
+    g = musicbrainz_like(1500, seed=4)
+    taper = Taper(g, 4, TaperConfig(max_iterations=3))
+    part = hash_partition(g.n, 4, seed=1)
+    frontier = np.arange(50)
+    rep = taper.invoke(part, _workload(), frontier=frontier)
+    assert rep.final_part.shape == (g.n,)
+    assert partition_balance(rep.final_part, 4) <= 1.06
+
+
+# ---------------------------------------------------------------------------
+# OnlineTaper
+# ---------------------------------------------------------------------------
+
+
+def test_online_taper_places_new_vertices_and_invokes():
+    g = musicbrainz_like(1200, seed=5)
+    ot = OnlineTaper(
+        g, 4, policy=OnlinePolicy(cadence=2, dirty_fraction=0.01))
+    ws = WorkloadStream([MQ1, MQ3], period=6.0, seed=2)
+    ms = GraphMutationStream(
+        mode="mixed", seed=3, vertices_per_tick=3, edges_per_tick=8)
+    for _ in range(4):
+        ws.advance(1.0)
+        ot.observe(ws.sample(60))
+        ot.apply_mutations(ms.next_batch(g))
+        ot.step()
+    assert ot.part.shape == (g.n,)
+    assert (ot.part >= 0).all() and (ot.part < 4).all()
+    assert ot.invocations >= 1
+    assert partition_balance(ot.part, 4) <= 1.10
+
+
+def test_online_ingest_rejects_stale_or_skipped_records():
+    g = musicbrainz_like(600, seed=10)
+    ot = OnlineTaper(g, 4)
+    ms = GraphMutationStream(mode="grow", vertices_per_tick=2, seed=1)
+    a1 = g.apply_mutations(ms.next_batch(g))
+    a2 = g.apply_mutations(ms.next_batch(g))  # a1 skipped by the caller
+    with pytest.raises(ValueError, match="stale"):
+        ot.ingest(a1)
+    with pytest.raises(ValueError, match="non-contiguous"):
+        ot.ingest(a2)  # part still at the pre-a1 length
+
+
+def test_online_taper_no_workload_no_invoke():
+    g = musicbrainz_like(800, seed=6)
+    ot = OnlineTaper(g, 4, policy=OnlinePolicy(cadence=1, min_interval=0))
+    rep = ot.step()
+    assert not rep.invoked  # nothing observed yet -> nothing to fit
+
+
+def test_online_policy_workload_drift_trigger():
+    g = musicbrainz_like(800, seed=7)
+    ot = OnlineTaper(
+        g, 4,
+        policy=OnlinePolicy(cadence=100, dirty_fraction=1.0, drift_l1=0.3))
+    ot.observe([MQ1] * 50)
+    assert not ot.step().invoked      # no baseline yet: drift undefined
+    ot.invoke(reason="manual")        # establish the baseline
+    ot.observe([MQ1] * 50)
+    assert not ot.step().invoked      # same workload: no drift
+    for _ in range(6):
+        ot.observe([MQ3] * 50)        # decisive swing to MQ3
+    rep = ot.step()
+    assert rep.invoked and rep.reason == "workload"
+
+
+def test_online_policy_topology_trigger_is_frontier_local():
+    g = musicbrainz_like(1000, seed=8)
+    ot = OnlineTaper(
+        g, 4,
+        policy=OnlinePolicy(cadence=100, dirty_fraction=0.005, drift_l1=9.9))
+    ot.observe([MQ1, MQ3] * 30)
+    ot.invoke(reason="manual")        # establish baseline freqs
+    ms = GraphMutationStream(mode="churn", edges_per_tick=20, seed=4)
+    ot.apply_mutations(ms.next_batch(g))
+    rep = ot.step()
+    assert rep.invoked and rep.reason == "topology"
+    assert int(ot._dirty.sum()) == 0  # frontier consumed by the invocation
+
+
+def test_online_ipt_under_drift_beats_hash():
+    """End-to-end: combined topology+workload drift, OnlineTaper holds ipt
+    below the drifting hash baseline."""
+    g = musicbrainz_like(2000, seed=9)
+    k = 4
+    ws = WorkloadStream([MQ1, MQ3], period=8.0, seed=3)
+    ms = GraphMutationStream(
+        mode="mixed", seed=5, vertices_per_tick=2, edges_per_tick=6)
+    ex = QueryExecutor(g)
+    taper = Taper(g, k, TaperConfig(max_iterations=4))
+    part0 = taper.invoke(
+        hash_partition(g.n, k, seed=1), ws.workload()).final_part
+    ot = OnlineTaper(
+        g, k, part=part0,
+        policy=OnlinePolicy(cadence=3, dirty_fraction=0.01))
+    wins = 0
+    ticks = 5
+    for _ in range(ticks):
+        ws.advance(1.0)
+        ot.observe(ws.sample(80))
+        ot.apply_mutations(ms.next_batch(g))
+        w = ws.workload()
+        ot.step(measured_ipt=ex.workload_ipt(w, ot.part))
+        ipt_online = ex.workload_ipt(w, ot.part)
+        ipt_hash = ex.workload_ipt(w, hash_partition(g.n, k, seed=1))
+        wins += ipt_online < ipt_hash
+    assert wins >= ticks - 1  # at most one transient tick above baseline

@@ -1,0 +1,95 @@
+"""FrequencySketch lazy-decay regression tests (vs the eager formulation)."""
+import numpy as np
+import pytest
+
+from repro.core.rpq import parse_rpq
+from repro.workload.sketch import FrequencySketch
+
+Q = [parse_rpq(s) for s in ("a.b", "b.c", "c.(a|b)", "a.(b)*.c")]
+
+
+def _eager_frequencies(observations, half_life, min_freq=1e-4):
+    """Reference: decay *every* counter on every observation (the old
+    O(#distinct) implementation)."""
+    d = 0.5 ** (1.0 / half_life)
+    counts = {}
+    for q, w in observations:
+        for k in counts:
+            counts[k] *= d
+        counts[q.qhash] = counts.get(q.qhash, 0.0) + w
+    total = sum(counts.values())
+    if total <= 0:
+        return {}
+    out = {k: v / total for k, v in counts.items()}
+    return {k: (v if v >= min_freq else 0.0) for k, v in out.items()}
+
+
+def test_lazy_observe_matches_eager():
+    rng = np.random.default_rng(0)
+    obs = [(Q[int(i)], float(w))
+           for i, w in zip(rng.integers(0, len(Q), 200),
+                           rng.uniform(0.5, 2.0, 200))]
+    sk = FrequencySketch(half_life=17.0)
+    for q, w in obs:
+        sk.observe(q, w)
+    expect = _eager_frequencies(obs, 17.0)
+    got = sk.frequencies()
+    assert set(got) == set(expect)
+    for k in expect:
+        assert got[k] == pytest.approx(expect[k], rel=1e-9)
+
+
+def test_observe_is_o1_touches_only_observed_counter():
+    sk = FrequencySketch(half_life=10.0)
+    sk.observe(Q[0])
+    stored_before = sk.counts[Q[0].qhash]
+    for _ in range(50):
+        sk.observe(Q[1])
+    # lazy: Q[0]'s stored value untouched; decay only materialises on read
+    assert sk.counts[Q[0].qhash] == stored_before
+    freqs = sk.frequencies(min_freq=0.0)
+    assert freqs[Q[0].qhash] < freqs[Q[1].qhash]
+    expect0 = sk.decay ** 50 / (sk.decay ** 50 + sum(
+        sk.decay ** i for i in range(50)))
+    assert freqs[Q[0].qhash] == pytest.approx(expect0, rel=1e-9)
+
+
+def test_observe_batch_decays_once_per_batch():
+    sk = FrequencySketch(half_life=4.0)
+    sk.observe_batch([Q[0]] * 10)
+    w0 = sk.frequencies(min_freq=0.0)[Q[0].qhash]
+    assert w0 == pytest.approx(1.0)
+    # a big batch of Q1 advances the clock exactly one tick: Q0's counter
+    # decays by d once regardless of the batch size
+    sk.observe_batch([Q[1]] * 1000)
+    vals = sk._decayed()
+    assert vals[Q[0].qhash] == pytest.approx(10 * sk.decay, rel=1e-12)
+    assert vals[Q[1].qhash] == pytest.approx(1000.0)
+
+
+def test_preseeded_counts_survive():
+    """Counts seeded through the dataclass init (stamp 0) must not crash
+    reads or subsequent observes."""
+    sk = FrequencySketch(
+        half_life=10.0,
+        counts={Q[0].qhash: 2.0}, queries={Q[0].qhash: Q[0]})
+    assert sk.frequencies(min_freq=0.0)[Q[0].qhash] == pytest.approx(1.0)
+    sk.observe(Q[0])
+    vals = sk._decayed()
+    assert vals[Q[0].qhash] == pytest.approx(2.0 * sk.decay + 1.0, rel=1e-12)
+
+
+def test_empty_batch_is_noop():
+    sk = FrequencySketch()
+    sk.observe(Q[0])
+    t = sk._ticks
+    sk.observe_batch([])
+    assert sk._ticks == t
+
+
+def test_workload_snapshot_roundtrip():
+    sk = FrequencySketch(half_life=100.0)
+    sk.observe_batch([Q[0]] * 3 + [Q[1]])
+    wl = dict((q.qhash, f) for q, f in sk.workload())
+    assert wl[Q[0].qhash] == pytest.approx(0.75)
+    assert wl[Q[1].qhash] == pytest.approx(0.25)

@@ -1,0 +1,141 @@
+import os
+import sys
+
+if "jax" not in sys.modules and "host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    # force the shard devices BEFORE jax's first init (it locks the device
+    # count); standalone runs get an 8-way host mesh, run.py invocations
+    # (jax already initialised by an earlier benchmark) keep what exists
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ.get("REPRO_FIELD_SHARD_DEVICES", "8")
+        + " " + os.environ.get("XLA_FLAGS", "")).strip()
+
+__doc__ = """Sharded multi-device extroversion field: scaling + halo traffic.
+
+Acceptance benchmark for ``extroversion_field(backend="pallas_sharded")``:
+on an 8-way (forced host device) mesh at N >= 50k, k = 8, the sharded
+backend's warm per-invocation field time must beat the single-device
+``pallas`` backend by >= 2x, with the per-depth halo exchange moving
+strictly fewer bytes than a full-field exchange would.
+
+Reported rows:
+
+* ``field_shard/single_device_warm`` / ``field_shard/sharded_warm`` — warm
+  per-invocation wall time of each backend (same graph, same trie), with
+  the per-depth split in the derived column;
+* ``field_shard/speedup`` — single/sharded ratio on this host;
+* ``field_shard/halo_exchange`` — bytes per shard per depth step actually
+  exchanged (the psum'd frontier) vs what an all-gather of the full
+  ``(n, N_trie)`` field would move;
+* ``field_shard/patched_reinvoke`` — field time right after a *localized*
+  mutation batch, with how many of the S shards were re-uploaded (the
+  delta-aware shard patching at work; a scratch re-pack would re-upload
+  all of them).
+
+Scale via ``REPRO_BENCH_N`` (default 50000) and
+``REPRO_FIELD_SHARD_DEVICES`` (default 8; only effective standalone).
+"""
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from benchmarks.common import Report, workload_for
+from repro.core.tpstry import TPSTry
+from repro.core.visitor import extroversion_field
+from repro.graphs.generators import musicbrainz_like
+from repro.graphs.graph import MutationBatch
+from repro.graphs.partition import hash_partition
+
+BENCH_N = int(os.environ.get("REPRO_BENCH_N", "50000"))
+K = 8
+REPEATS = 3
+
+
+def _time_invocations(fn, repeats=REPEATS) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(report: Optional[Report] = None, n: int = BENCH_N, k: int = K) -> Report:
+    import jax
+
+    report = report or Report()
+    n_dev = len(jax.devices())
+    g = musicbrainz_like(n, avg_degree=6.0, seed=13)
+    w = workload_for("musicbrainz")
+    arrays = TPSTry.from_workload(w).compile(g.label_names)
+    part = hash_partition(g.n, k, seed=1)
+    depths = max(arrays.max_depth - 1, 1)  # DP steps per invocation
+
+    # -- single-device pallas baseline -------------------------------------
+    pre_single = {}
+    t0 = time.perf_counter()
+    extroversion_field(g, arrays, part, k, _precomputed=pre_single,
+                       backend="pallas")
+    t_single_cold = time.perf_counter() - t0
+    t_single = _time_invocations(lambda: extroversion_field(
+        g, arrays, part, k, _precomputed=pre_single, backend="pallas"))
+    report.add("field_shard/single_device_warm", t_single,
+               f"n={g.n} m={g.m} trie_N={arrays.n_nodes} "
+               f"per_depth={1e3 * t_single / depths:.2f}ms")
+
+    # -- sharded backend ----------------------------------------------------
+    pre_shard = {}
+    t0 = time.perf_counter()
+    fld_sh = extroversion_field(g, arrays, part, k, _precomputed=pre_shard,
+                                backend="pallas_sharded")
+    t_shard_cold = time.perf_counter() - t0
+    t_shard = _time_invocations(lambda: extroversion_field(
+        g, arrays, part, k, _precomputed=pre_shard,
+        backend="pallas_sharded"))
+    sp = g.vm_packing_sharded(n_dev)
+    report.add("field_shard/sharded_warm", t_shard,
+               f"devices={n_dev} shards={sp.n_shards} "
+               f"per_depth={1e3 * t_shard / depths:.2f}ms "
+               f"cold={t_shard_cold:.2f}s_vs_{t_single_cold:.2f}s")
+
+    speedup = t_single / max(t_shard, 1e-12)
+    report.add("field_shard/speedup", t_single - t_shard,
+               f"{speedup:.2f}x_single_over_sharded devices={n_dev} "
+               f"target>=2x_at_8dev")
+
+    # -- parity guard (the speedup must be of the same answer) --------------
+    fld_ref = extroversion_field(g, arrays, part, k, backend="jnp")
+    err = float(np.abs(fld_ref.extroversion - fld_sh.extroversion).max())
+    assert err < 1e-4, f"sharded field diverged from jnp oracle: {err}"
+
+    # -- halo traffic vs full-field exchange --------------------------------
+    halo = sp.halo_bytes_per_depth(arrays.n_nodes)
+    full = sp.full_field_bytes_per_depth(g.n, arrays.n_nodes)
+    assert halo < full, "halo exchange must beat a full-field exchange"
+    report.add("field_shard/halo_exchange", 0.0,
+               f"halo_bytes={halo} full_field_bytes={full} "
+               f"ratio={halo / full:.3f} frontier={sp.n_frontier}/{g.n}")
+
+    # -- delta-aware shard patching -----------------------------------------
+    # a mutation localized to the first shard's vertex range: the cached
+    # packing is patched (dirty shards only), never re-packed from scratch
+    lim = sp.n_local_pad
+    rng = np.random.default_rng(0)
+    ends = rng.integers(0, max(lim - 1, 1), (8, 2))
+    g.apply_mutations(MutationBatch(add_edges=ends))
+    t0 = time.perf_counter()
+    extroversion_field(g, arrays, part, k, _precomputed=pre_shard,
+                       backend="pallas_sharded")
+    t_patched = time.perf_counter() - t0
+    ups = pre_shard["_shard_uploads"]
+    report.add("field_shard/patched_reinvoke", t_patched,
+               f"dirty_shards_uploaded={ups['last_shards']}/{sp.n_shards} "
+               f"scratch_rebuilds={ups['rebuilds']}")
+    return report
+
+
+if __name__ == "__main__":
+    run().emit()

@@ -19,6 +19,9 @@ CORE = [
     "fig11_online",
     "online_topology",
     "swap_scale",
+    # multi-device field scaling; under run.py it inherits whatever device
+    # count jax already initialised (run standalone for the 8-way mesh)
+    "field_shard",
 ]
 
 # integration benchmarks: skipped (by name) only when a genuinely optional

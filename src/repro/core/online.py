@@ -17,7 +17,10 @@ cost — not a fixed cadence but triggers on
 * **workload**: L1 drift of the sketched frequencies since the last
   invocation;
 * **ipt regression**: a caller-measured ipt exceeding the post-invocation
-  baseline by a configured ratio;
+  baseline by a configured ratio — additionally gated (when
+  ``OnlinePolicy.min_ipt_gain_per_mb`` > 0) on the projected ipt saving
+  beating the degree-proportional vertex-state bytes the invocation's
+  expected moves would ship between partitions;
 * **cadence**: a hard upper bound on ticks between invocations.
 
 Brand-new vertices are placed greedily on arrival: each picks the partition
@@ -55,6 +58,16 @@ class OnlinePolicy:
     ipt_regression: float = 1.2  # ipt trigger: measured / measured@invoke
     frontier_only: bool = True  # topology-triggered invocations are local
     min_freq: float = 1e-4      # sketch noise floor for the workload
+    #: estimated bytes of vertex state shipped per incident edge when a
+    #: vertex migrates between partitions (degree-proportional model: a
+    #: vertex's serialized adjacency + per-edge payload dominates its
+    #: transfer cost on a real store)
+    migration_bytes_per_edge: float = 64.0
+    #: ipt-regression gate: invoke only when the projected per-tick ipt
+    #: saving (measured - post-invocation baseline) per megabyte of
+    #: projected migration traffic clears this threshold.  0 disables the
+    #: gate (regression ratio alone decides, the pre-PR-3 behaviour).
+    min_ipt_gain_per_mb: float = 0.0
 
 
 @dataclass
@@ -100,6 +113,7 @@ class OnlineTaper:
         self._last_invoke_tick = 0
         self._freqs_at_invoke: Dict[str, float] = {}
         self._ipt_at_invoke: Optional[float] = None
+        self._last_total_moves: Optional[int] = None
 
     # -- inputs ---------------------------------------------------------------
     def observe(self, queries: Iterable) -> None:
@@ -202,11 +216,42 @@ class OnlineTaper:
                 return "workload"
         if (measured_ipt is not None and self._ipt_at_invoke is not None
                 and self._ipt_at_invoke > 0
-                and measured_ipt / self._ipt_at_invoke >= pol.ipt_regression):
+                and measured_ipt / self._ipt_at_invoke >= pol.ipt_regression
+                and self._migration_worthwhile(measured_ipt)):
             return "ipt"
         if since >= pol.cadence:
             return "cadence"
         return None
+
+    def estimated_migration_bytes(self) -> float:
+        """Projected vertex-state transfer cost of the next invocation.
+
+        Moves are estimated from the last invocation's actual move count
+        (falling back to the topology trigger's dirty threshold before any
+        history exists) and each move ships degree-proportional state:
+        ``avg_degree * migration_bytes_per_edge`` bytes per vertex."""
+        g = self.g
+        est_moves = (self._last_total_moves
+                     if self._last_total_moves is not None
+                     else max(1, int(self.policy.dirty_fraction * g.n)))
+        avg_deg = g.m / max(g.n, 1)
+        return est_moves * avg_deg * self.policy.migration_bytes_per_edge
+
+    def _migration_worthwhile(self, measured_ipt: float) -> bool:
+        """Gate the ipt-regression trigger on projected savings beating the
+        migration cost (ROADMAP: invoke only when the enhancement pays for
+        the bytes it moves)."""
+        threshold = self.policy.min_ipt_gain_per_mb
+        if threshold <= 0:
+            return True
+        baseline = self._ipt_at_invoke
+        if baseline is None:
+            return True
+        projected_gain = measured_ipt - baseline
+        mb = self.estimated_migration_bytes() / 2**20
+        if mb <= 0:
+            return True
+        return projected_gain / mb >= threshold
 
     def step(self, measured_ipt: Optional[float] = None) -> OnlineStepReport:
         """Advance one tick and invoke TAPER if the policy says so.
@@ -242,6 +287,7 @@ class OnlineTaper:
         report = self.taper.invoke(self.part, workload, frontier=frontier)
         self.part = report.final_part.astype(np.int32).copy()
         self._dirty[:] = False
+        self._last_total_moves = report.total_moves
         self.invocations += 1
         self._last_invoke_tick = self.tick
         self._freqs_at_invoke = self.sketch.frequencies(self.policy.min_freq)

@@ -47,7 +47,10 @@ class TaperConfig:
     #: derives each candidate's preferences lazily from its own cut edges
     #: (cheaper for large k / short candidate queues).
     dense_ext_to: bool = True
-    field_backend: str = "jnp"       # "jnp" | "pallas" (vm_step TPU kernel)
+    #: extroversion-field DP engine: "jnp" (fused XLA), "pallas" (vm_step
+    #: kernel, single device) or "pallas_sharded" (vm_step per mesh shard
+    #: with frontier halo exchange — scales the field with device count)
+    field_backend: str = "jnp"
     star_max: int = 3
     trie_max_len: Optional[int] = None
     seed: int = 0

@@ -22,6 +22,28 @@ the inner step, and this module is its jnp oracle.
 One jit cache entry exists per (trie topology, graph/partition shapes); trie
 *probabilities* are runtime arguments so workload-frequency drift never
 recompiles.
+
+Multi-device (``backend="pallas_sharded"``): the packed edge blocks are
+dealt across the mesh's ``model`` axis (``LabelledGraph.vm_packing_sharded``)
+and the depth loop runs under ``shard_map`` as a **halo-exchange recurrence**:
+
+  1. every shard scatters the ``beta`` rows it owns *and other shards read*
+     (its slice of the precomputed frontier) into an ``(H_pad, N)`` buffer;
+  2. one ``psum`` over ``model`` completes the frontier — each frontier
+     vertex is owned by exactly one shard, so the sum is a union.  This is
+     the only cross-shard traffic per depth: ``H_pad * N`` floats instead
+     of the full ``n * N`` field;
+  3. each shard advances its local destination blocks with the ``vm_step``
+     kernel, gathering sources from ``concat([beta_local, frontier])`` via
+     the packing's precomputed ``src_map`` — remote columns resolve into
+     the frontier segment, owned columns into the local segment;
+  4. per-slot edge masses accumulate shard-locally (over *all* edges, cut
+     and local) and scatter back to raw edge order on the host at the end.
+
+Because destination blocks never cross shards, the kernel's output rows are
+wholly shard-local and ``alpha`` assembles by concatenation.  After graph
+mutations, stale device buffers re-upload per *dirty shard* (the packing's
+``shard_epoch`` counters), not wholesale.
 """
 from __future__ import annotations
 
@@ -346,6 +368,194 @@ def _pallas_field(
                              alpha, mass, src, dst, part_dev, local, n)
 
 
+def _build_sharded_fn(mesh, trie: TrieArrays, depth_cap: int,
+                      bps: int, block_n: int, block_e: int,
+                      n_local_pad: int, h_pad: int, interpret: bool):
+    """shard_map'd halo-exchange depth loop (see module docstring §sharded).
+
+    Static per (mesh, trie topology, packing shapes): the trie topology and
+    depth count bake into the loop; probabilities, the partition vector and
+    the packed shard arrays arrive as runtime inputs.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.vm_step.kernel import vm_step_packed
+
+    depth = trie.depth.copy()
+    labels_n = trie.label.copy()
+    N = trie.n_nodes
+    max_depth = min(trie.max_depth, depth_cap)
+
+    def body(meta, src_map, dst_local, dst_label, inv_full, src_g, dst_g,
+             vlab, frloc, frown, part, p, lab_vcount, T, Tsum):
+        # sharded inputs arrive with their leading shard axis (size 1)
+        (meta, src_map, dst_local, dst_label, inv_full, src_g, dst_g,
+         vlab, frloc, frown) = (
+            x[0] for x in (meta, src_map, dst_local, dst_label, inv_full,
+                           src_g, dst_g, vlab, frloc, frown))
+        local = (part[src_g] == part[dst_g]).astype(jnp.float32)
+        inv_local = inv_full * local
+        alpha = _prior_columns(depth, labels_n, N, vlab, lab_vcount, p,
+                               n_local_pad)
+        beta = alpha
+        slot_mass = jnp.zeros(inv_full.shape, dtype=jnp.float32)
+        for _ in range(2, max_depth + 1):
+            # halo exchange: each shard contributes its owned frontier rows;
+            # psum completes the union (each row has exactly one owner)
+            fr = jax.lax.psum(beta[frloc] * frown[:, None], "model")
+            a_in = jnp.concatenate([beta, fr], axis=0)
+            # per-slot mass over ALL edges (cut + local) at this depth
+            slot_mass = slot_mass + (
+                a_in[src_map] * Tsum[dst_label]).sum(axis=1) * inv_full
+            # the DP advances over intra-partition edges only
+            beta = vm_step_packed(
+                a_in, T, src_map, dst_local, dst_label, inv_local, meta,
+                bps, block_n, block_e, interpret=interpret)
+            alpha = alpha + beta
+        return alpha[None], slot_mass[None]
+
+    sharded = (P("model"),) * 10
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=sharded + (P(), P(), P(), P(), P()),
+        out_specs=(P("model"), P("model")),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def _sharded_device_arrays(sp, pre: Dict) -> Dict:
+    """Device-resident stacked shard arrays, re-uploaded per dirty shard.
+
+    The packing's ``shard_epoch`` counters say which shard slices changed
+    since this cache last uploaded them; only those rows move to the device
+    (plus the small frontier maps when ``fr_epoch`` moved).  Upload counts
+    accumulate in ``pre["_shard_uploads"]`` for benchmarks/tests.
+    """
+    stats = pre.setdefault(
+        "_shard_uploads", {"last_shards": 0, "total_shards": 0, "rebuilds": 0})
+    names = ("meta", "src_map", "dst_local", "dst_label", "inv_cnt",
+             "src_global", "dst_global", "vlabels")
+    sdev = pre.get("_shard_dev")
+    if sdev is not None and sdev["sp"] is not sp:
+        sdev = None  # packing was rebuilt from scratch (capacity overflow)
+    if sdev is None:
+        sdev = {"sp": sp,
+                "epochs": sp.shard_epoch.copy(),
+                "fr_epoch": sp.fr_epoch,
+                "arrays": {nm: jnp.asarray(getattr(sp, nm)) for nm in names},
+                "fr": (jnp.asarray(sp.fr_local_idx),
+                       jnp.asarray(sp.fr_owned))}
+        pre["_shard_dev"] = sdev
+        stats["last_shards"] = sp.n_shards
+        stats["total_shards"] += sp.n_shards
+        stats["rebuilds"] += 1
+        return sdev
+    dirty = np.nonzero(sp.shard_epoch != sdev["epochs"])[0]
+    for s in dirty.tolist():
+        for nm in names:
+            sdev["arrays"][nm] = sdev["arrays"][nm].at[s].set(
+                jnp.asarray(getattr(sp, nm)[s]))
+    if sp.fr_epoch != sdev["fr_epoch"]:
+        sdev["fr"] = (jnp.asarray(sp.fr_local_idx), jnp.asarray(sp.fr_owned))
+        sdev["fr_epoch"] = sp.fr_epoch
+    sdev["epochs"] = sp.shard_epoch.copy()
+    stats["last_shards"] = int(dirty.size)
+    stats["total_shards"] += int(dirty.size)
+    return sdev
+
+
+def _pallas_sharded_field(
+    g: LabelledGraph,
+    trie: TrieArrays,
+    part: np.ndarray,
+    k: int,
+    depth_cap: int,
+    pre: Dict,
+    dense_ext_to: bool,
+    interpret: Optional[bool] = None,
+    mesh=None,
+):
+    """Multi-device extroversion field: ``vm_step`` per shard over the
+    graph's sharded packing, halo-exchanging only the frontier ``beta``
+    columns between depth steps (module docstring §sharded).
+
+    The mesh defaults to ``repro.launch.mesh.make_smoke_mesh()`` over every
+    visible device and is cached in ``pre["_mesh"]``; callers may seed
+    ``pre["_mesh"]`` (e.g. a production mesh's ``model`` axis) instead.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if mesh is None:
+        mesh = pre.get("_mesh")
+    if mesh is None:
+        from repro.launch.mesh import make_smoke_mesh
+
+        mesh = make_smoke_mesh()
+        pre["_mesh"] = mesh
+    S = int(mesh.shape["model"])
+
+    n, m = g.n, g.m
+    N = trie.n_nodes
+    cnt = pre.get("cnt")
+    if cnt is None:
+        # the graph's own (incrementally patched) matrix, so the cached
+        # sharded packing stays patchable across mutations
+        cnt = g.cached_neighbor_label_counts()
+    lab_vcount = pre.get("lab_vcount")
+    if lab_vcount is None:
+        lab_vcount = g.label_counts()
+    dev = _device_inputs(g, pre, cnt, lab_vcount)
+
+    sp = g.vm_packing_sharded(S, cnt=cnt)
+    sdev = _sharded_device_arrays(sp, pre)
+    arr = sdev["arrays"]
+    frloc, frown = sdev["fr"]
+
+    T_key = (trie.topology_signature(), int(depth_cap), trie.cond_p.tobytes())
+    t_hit = pre.get("_T_dev")
+    if t_hit is None or t_hit[0] != T_key:
+        T = jnp.asarray(_capped_transition(trie, depth_cap))
+        Tsum = T.sum(axis=2)
+        pre["_T_dev"] = (T_key, T, Tsum)
+    else:
+        _, T, Tsum = t_hit
+
+    key = ("sharded", trie.topology_signature(), int(depth_cap), S,
+           sp.blocks_per_shard, sp.block_n, sp.block_e, sp.eb_cap,
+           sp.n_local_pad, sp.h_pad, bool(interpret), id(mesh))
+    fn = _FIELD_CACHE.get(key)
+    if fn is None:
+        fn = _build_sharded_fn(
+            mesh, trie, depth_cap, sp.blocks_per_shard, sp.block_n,
+            sp.block_e, sp.n_local_pad, sp.h_pad, interpret)
+        while len(_FIELD_CACHE) >= 64:
+            _FIELD_CACHE.pop(next(iter(_FIELD_CACHE)))
+        _FIELD_CACHE[key] = fn
+
+    part_dev = jnp.asarray(part.astype(np.int32))
+    alpha_sh, slot_mass = fn(
+        arr["meta"], arr["src_map"], arr["dst_local"], arr["dst_label"],
+        arr["inv_cnt"], arr["src_global"], arr["dst_global"], arr["vlabels"],
+        frloc, frown,
+        part_dev, jnp.asarray(trie.p),
+        dev["lab_vcount"], T, Tsum)
+
+    alpha = jnp.reshape(alpha_sh, (S * sp.n_local_pad, N))[:n]
+    mass = jnp.asarray(sp.scatter_slot_values(np.asarray(slot_mass), m))
+    src, dst = dev["src"], dev["dst"]
+    local = (part_dev[src] == part_dev[dst]).astype(jnp.float32)
+
+    max_depth = min(trie.max_depth, depth_cap)
+    counted = [
+        i for i in range(N)
+        if 1 <= int(trie.depth[i]) < max_depth and not bool(trie.is_leaf[i])
+    ]
+    return _field_aggregates(counted, k, dense_ext_to,
+                             alpha, mass, src, dst, part_dev, local, n)
+
+
 def extroversion_field(
     g: LabelledGraph,
     trie: TrieArrays,
@@ -372,13 +582,20 @@ def extroversion_field(
     of a little host work per candidate.
 
     ``backend`` selects the DP engine: ``"jnp"`` (the fused XLA
-    transcription) or ``"pallas"`` (the ``vm_step`` TPU kernel over the
-    graph's cached edge packing; interpret mode auto-disables on TPU).
+    transcription), ``"pallas"`` (the ``vm_step`` TPU kernel over the
+    graph's cached edge packing; interpret mode auto-disables on TPU) or
+    ``"pallas_sharded"`` (the same kernel per shard over every visible
+    device, halo-exchanging only cross-shard frontier columns between depth
+    steps — see the module docstring; seed ``_precomputed["_mesh"]`` to pin
+    a specific mesh).
     """
     depth_cap = depth_cap or trie.max_depth
     pre = _precomputed if _precomputed is not None else {}
     if backend == "pallas":
         out = _pallas_field(g, trie, part, k, depth_cap, pre, dense_ext_to)
+    elif backend == "pallas_sharded":
+        out = _pallas_sharded_field(g, trie, part, k, depth_cap, pre,
+                                    dense_ext_to)
     elif backend == "jnp":
         key = (trie.topology_signature(), k, depth_cap, g.n, g.m, fused,
                dense_ext_to)

@@ -86,6 +86,14 @@ class AppliedMutation:
     removed_dst: np.ndarray  # (r,) int32
     old2new: np.ndarray     # (m_before,) int64, -1 where removed
     new_edge_pos: np.ndarray  # (a,) int64 positions of added edges (new order)
+    #: graph version the record's *pre* state corresponds to.  A freshly
+    #: applied batch spans one version (``version - 1 -> version``); log
+    #: compaction composes adjacent records into wider spans.
+    version_base: int = -1
+
+    def __post_init__(self):
+        if self.version_base < 0:
+            self.version_base = self.version - 1
 
     @property
     def is_noop(self) -> bool:
@@ -108,6 +116,57 @@ class AppliedMutation:
         return np.unique(np.concatenate(parts))
 
 
+def compose_mutations(a: AppliedMutation, b: AppliedMutation) -> AppliedMutation:
+    """Compose two *adjacent* records into one spanning both mutations.
+
+    Requires ``b.version_base == a.version`` (b applies directly on top of
+    a).  The composed ``old2new`` and ``new_edge_pos`` are exact.  The
+    added/removed endpoint lists stay *bounded*: edges that are transient
+    within the span (added by ``a`` then removed by ``b``) are pruned from
+    both sides, so repeated churn over the same edge never accumulates —
+    list sizes are bounded by the distinct edge universe, not by lifetime
+    batch count.  An edge removed by ``a`` and re-added by ``b`` keeps both
+    entries (a conservative dirty-seed superset; consumers re-derive
+    against the final arrays, so extra seeds cost time, never correctness).
+    """
+    if b.version_base != a.version:
+        raise ValueError(
+            f"cannot compose: records not adjacent "
+            f"({a.version_base}->{a.version} then {b.version_base}->{b.version})")
+    valid = a.old2new >= 0
+    old2new = np.full(a.old2new.shape[0], -1, dtype=np.int64)
+    old2new[valid] = b.old2new[a.old2new[valid]]
+    # a's added edges that survive b, re-indexed into b's final order
+    a_pos_new = (b.old2new[a.new_edge_pos]
+                 if a.new_edge_pos.size else a.new_edge_pos)
+    surv = a_pos_new >= 0
+    added_src = np.concatenate([a.added_src[surv], b.added_src])
+    added_dst = np.concatenate([a.added_dst[surv], b.added_dst])
+    new_edge_pos = np.concatenate([a_pos_new[surv], b.new_edge_pos])
+    order = np.argsort(new_edge_pos, kind="stable")
+    # prune b-removals of edges a itself added (transient within the span:
+    # absent at the base, absent at the end — they are not removals w.r.t.
+    # the composed pre-state, and dropping them is what keeps compacted
+    # records from growing with every churn cycle over the same edge)
+    span = np.int64(max(b.n_after, 1))
+    b_rem_keys = b.removed_src.astype(np.int64) * span + b.removed_dst
+    a_add_keys = np.unique(
+        a.added_src.astype(np.int64) * span + a.added_dst)
+    genuine = ~np.isin(b_rem_keys, a_add_keys)
+    return AppliedMutation(
+        version=b.version,
+        n_before=a.n_before,
+        n_after=b.n_after,
+        added_src=added_src[order].astype(np.int32),
+        added_dst=added_dst[order].astype(np.int32),
+        removed_src=np.concatenate([a.removed_src, b.removed_src[genuine]]),
+        removed_dst=np.concatenate([a.removed_dst, b.removed_dst[genuine]]),
+        old2new=old2new,
+        new_edge_pos=new_edge_pos[order],
+        version_base=a.version_base,
+    )
+
+
 @dataclass
 class LabelledGraph:
     """A vertex-labelled graph ``G = (V, E, L_V, l)``.
@@ -123,7 +182,12 @@ class LabelledGraph:
         :meth:`apply_mutations`; lets derived caches detect staleness.
     """
 
-    #: how many AppliedMutation records to retain for incremental consumers
+    #: ring size of the mutation log.  When a new record would overflow it,
+    #: the two oldest records are *composed* (``compose_mutations``) rather
+    #: than dropped, so the log always reaches back to its earliest base
+    #: version and slow consumers patch across arbitrarily long gaps —
+    #: falling back to rebuild only when their snapshot predates that base
+    #: or falls strictly inside a compacted span.
     MUTATION_LOG_LIMIT = 16
 
     n: int
@@ -289,6 +353,37 @@ class LabelledGraph:
         self._vm_pack_cache[key] = (np.asarray(cnt), entry)
         return entry
 
+    def vm_packing_sharded(self, n_shards: int,
+                           cnt: Optional[np.ndarray] = None,
+                           block_n: int = 128, block_e: int = 256):
+        """Cached shard-aware edge packing for the multi-device field.
+
+        Returns a :class:`repro.graphs.sharded_packing.ShardedVMPacking`:
+        the ``vm_packing`` destination blocks dealt contiguously across
+        ``n_shards`` shards, with per-shard local/halo source index maps and
+        the frontier-exchange tables (see that module's docstring).  Cached
+        per ``(n_shards, block_n, block_e)`` and version-keyed like
+        :meth:`vm_packing`; :meth:`apply_mutations` patches cached entries
+        per dirty shard (bumping their ``shard_epoch`` counters so device
+        caches re-upload only changed shard slices), evicting only when the
+        mutation outgrows the packing's capacity slack.
+        """
+        if cnt is None:
+            cnt = self.cached_neighbor_label_counts()
+        key = ("sharded", int(n_shards), int(block_n), int(block_e))
+        hit = self._vm_pack_cache.get(key)
+        if hit is not None:
+            cached_cnt, entry = hit
+            if entry.version == self.version and (
+                    cached_cnt is cnt or np.array_equal(cnt, cached_cnt)):
+                return entry
+        from repro.graphs.sharded_packing import build_sharded_vm_packing
+
+        entry = build_sharded_vm_packing(
+            self, n_shards, cnt, block_n=block_n, block_e=block_e)
+        self._vm_pack_cache[key] = (np.asarray(cnt), entry)
+        return entry
+
     def label_counts(self) -> np.ndarray:
         """(n_labels,) number of vertices per label."""
         return np.bincount(self.labels, minlength=self.n_labels)
@@ -411,6 +506,7 @@ class LabelledGraph:
                 removed_dst=np.empty(0, np.int32),
                 old2new=np.arange(m_old, dtype=np.int64),
                 new_edge_pos=np.empty(0, np.int64),
+                version_base=self.version,
             )
 
         # ---- merge kept + added (one searchsorted, no re-sort) -----------
@@ -483,8 +579,12 @@ class LabelledGraph:
             add_s * L + labels_new[add_d],
         ]))
         patched_entries = {}
+        sharded_items = []
         for key, hit in self._vm_pack_cache.items():
             if key == "_default_cnt":
+                continue
+            if isinstance(key, tuple) and key and key[0] == "sharded":
+                sharded_items.append((key, hit))
                 continue
             cached_cnt, entry = hit
             patchable = (
@@ -512,6 +612,30 @@ class LabelledGraph:
         if cnt_new is not None:
             self._vm_pack_cache["_default_cnt"] = cnt_new
         self.version += 1
+
+        # ---- patch cached sharded packings (dirty shards only) -----------
+        sharded_patchable = (
+            cnt_new is not None
+            and rev_new is not None
+            and bool((rev_new >= 0).all() if m_new else True)
+        )
+        if sharded_items:
+            from repro.graphs.sharded_packing import patch_sharded_vm_packing
+
+            for key, (cached_cnt, entry) in sharded_items:
+                ok = (
+                    sharded_patchable
+                    and (cached_cnt is cnt_old
+                         or np.array_equal(cached_cnt, cnt_old))
+                    and patch_sharded_vm_packing(
+                        entry, self, cnt_new, changed_dsts, changed_pairs,
+                        n_old, old2new)
+                )
+                if ok:
+                    self._vm_pack_cache[key] = (cnt_new, entry)
+                # capacity overflow / custom cnt: entry stays evicted and is
+                # rebuilt from scratch on next vm_packing_sharded call
+
         applied = AppliedMutation(
             version=self.version,
             n_before=n_old,
@@ -524,8 +648,14 @@ class LabelledGraph:
             new_edge_pos=new_pos_added,
         )
         self._mutation_log.append(applied)
-        if len(self._mutation_log) > self.MUTATION_LOG_LIMIT:
-            del self._mutation_log[: -self.MUTATION_LOG_LIMIT]
+        while len(self._mutation_log) > self.MUTATION_LOG_LIMIT:
+            # ring compaction: instead of dropping the oldest record (which
+            # would strand slow consumers on a rebuild), compose the two
+            # oldest into one wider-span record — old2new maps compose
+            # eagerly, so a consumer at the span's base still patches
+            self._mutation_log[:2] = [
+                compose_mutations(self._mutation_log[0],
+                                  self._mutation_log[1])]
         return applied
 
     def _patch_vm_entry(self, key, entry, src_new, dst_new, row_ptr_new,

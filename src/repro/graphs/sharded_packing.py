@@ -1,0 +1,359 @@
+"""Shard-aware edge packing for the multi-device extroversion field.
+
+Partitions the per-graph ``vm_packing`` destination blocks across a device
+mesh's ``model`` axis so the ``vm_step`` Pallas kernel can run one shard per
+device over its *local* edge blocks.  Each shard owns a contiguous vertex
+range (``blocks_per_shard * block_n`` ids) and therefore a contiguous range
+of destination blocks — the kernel's output rows never cross shards.  What
+does cross shards is the *source* side of an edge: a shard's edge blocks may
+read ``beta`` columns of vertices owned elsewhere (the shard's **halo**).
+
+The packing precomputes everything the halo exchange needs:
+
+* ``frontier`` — the union of all shards' halo vertices.  Per depth step the
+  exchange moves only these ``(H_pad, N_trie)`` columns (one ``psum`` over
+  the ``model`` axis), not the full ``(n, N_trie)`` field.
+* ``src_map`` — per-shard source indices remapped into the concatenated
+  ``[local rows | frontier rows]`` index space, so the kernel gathers from
+  one contiguous ``beta`` buffer without runtime translation.
+* ``fr_local_idx`` / ``fr_owned`` — each shard's contribution map into the
+  frontier buffer (its owned frontier rows; ``psum`` completes the union
+  because every frontier vertex is owned by exactly one shard).
+* ``slot_raw`` — packed slot -> raw edge id, so per-slot edge masses scatter
+  back into the graph's raw edge order on the host.
+
+Like :meth:`LabelledGraph.vm_packing`, the packing is partition-independent
+(the TAPER ``part`` vector never appears here) and version-keyed.  After
+:meth:`LabelledGraph.apply_mutations` the cached packing is **patched per
+dirty shard** (:func:`patch_sharded_vm_packing`): only shards whose
+destination blocks contain a mutated endpoint are refilled, new halo
+vertices are *appended* to the frontier (existing positions stay valid, so
+unaffected shards' ``src_map`` rows survive untouched), and per-shard
+``shard_epoch`` counters tell device-buffer caches exactly which shard
+slices to re-upload.  Capacity headroom (``EB_SLACK`` spare edge blocks per
+shard, ``FR_SLACK`` spare frontier rows) absorbs modest growth without a
+shape change; overflowing it evicts the entry for a scratch rebuild.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+#: spare edge blocks per shard so mutations can grow a shard in place
+EB_SLACK = 2
+#: spare frontier rows so mutations can append halo vertices in place
+FR_SLACK = 64
+
+
+def _dst_sorted_view(g) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """``(e_src, e_dst, e_raw)`` — the edge list sorted by ``(dst, src)``
+    with ``e_raw`` the raw (``(src, dst)``-sorted) position of each edge.
+
+    Symmetric graphs get this for free: the dst-sorted view is the raw
+    arrays with roles swapped, and the sort permutation is the reverse-edge
+    involution (the identity ``vm_packing`` patching already exploits).
+    """
+    if g.is_symmetric():
+        return g.dst, g.src, g.reverse_edge_index
+    order = np.lexsort((g.src, g.dst))
+    return g.src[order], g.dst[order], order
+
+
+@dataclass
+class ShardedVMPacking:
+    """Stacked per-shard ``vm_step`` inputs (leading axis = shard)."""
+
+    n_shards: int
+    block_n: int
+    block_e: int
+    blocks_per_shard: int          # destination blocks per shard (capacity)
+    n_local_pad: int               # blocks_per_shard * block_n
+    eb_cap: int                    # edge blocks per shard (incl. slack)
+    meta: np.ndarray               # (S, eb_cap, 2) [local dst block, is_first]
+    src_map: np.ndarray            # (S, e_pad) int32 into [local | frontier]
+    src_global: np.ndarray         # (S, e_pad) int32 global source vertex
+    dst_local: np.ndarray          # (S, e_pad) int32 within-block destination
+    dst_global: np.ndarray         # (S, e_pad) int32 global destination vertex
+    dst_label: np.ndarray          # (S, e_pad) int32 label of destination
+    inv_cnt: np.ndarray            # (S, e_pad) f32 1/cnt[src, l(dst)], 0 pad
+    slot_raw: np.ndarray           # (S, e_pad) int64 raw edge id, -1 pad
+    vlabels: np.ndarray            # (S, n_local_pad) int32 owned labels, -1 pad
+    frontier: np.ndarray           # (H_pad,) int64; first n_frontier live
+    n_frontier: int
+    fr_local_idx: np.ndarray       # (S, H_pad) int32 owner-local row
+    fr_owned: np.ndarray           # (S, H_pad) f32 1.0 iff shard owns entry
+    version: int                   # graph version the arrays reflect
+    shard_epoch: np.ndarray = field(default=None)  # (S,) int64 change counters
+    fr_epoch: int = 0
+
+    def __post_init__(self):
+        if self.shard_epoch is None:
+            self.shard_epoch = np.zeros(self.n_shards, dtype=np.int64)
+
+    @property
+    def e_pad(self) -> int:
+        return self.eb_cap * self.block_e
+
+    @property
+    def h_pad(self) -> int:
+        return int(self.frontier.shape[0])
+
+    def owner_of(self, v) -> np.ndarray:
+        return np.asarray(v) // self.n_local_pad
+
+    def halo_bytes_per_depth(self, n_trie: int, itemsize: int = 4) -> int:
+        """Bytes each shard receives per depth step (the psum'd frontier)."""
+        return self.h_pad * n_trie * itemsize
+
+    def full_field_bytes_per_depth(self, n: int, n_trie: int,
+                                   itemsize: int = 4) -> int:
+        """Bytes an all-gather of the full field would move instead."""
+        return n * n_trie * itemsize
+
+    def scatter_slot_values(self, values: np.ndarray, m: int,
+                            dtype=np.float32) -> np.ndarray:
+        """Scatter per-slot values (flattened ``(S * e_pad,)`` or
+        ``(S, e_pad)``) back into raw edge order."""
+        flat = np.asarray(values).reshape(-1)
+        raw = self.slot_raw.reshape(-1)
+        ok = raw >= 0
+        out = np.zeros(m, dtype=dtype)
+        out[raw[ok]] = flat[ok]
+        return out
+
+
+def _fill_shard(sp: ShardedVMPacking, s: int, g, cnt,
+                e_src: np.ndarray, e_dst: np.ndarray,
+                e_raw: np.ndarray) -> Optional[np.ndarray]:
+    """Refill shard ``s``'s packed rows from the current graph.
+
+    Returns the shard's halo vertex array (sorted unique), or ``None`` when
+    the shard's real edges no longer fit ``eb_cap`` (caller must rebuild).
+    Does not touch ``src_map`` — the caller remaps after frontier updates.
+    """
+    bn, be, bps = sp.block_n, sp.block_e, sp.blocks_per_shard
+    blocks = np.arange(s * bps, (s + 1) * bps, dtype=np.int64)
+    vlo_all = np.minimum(blocks * bn, g.n)
+    vhi_all = np.minimum((blocks + 1) * bn, g.n)
+    lo_all = np.searchsorted(e_dst, vlo_all)
+    hi_all = np.searchsorted(e_dst, vhi_all)
+    cnt_b = hi_all - lo_all
+    eb_need = np.maximum(1, -(-cnt_b // be))
+    if int(eb_need.sum()) > sp.eb_cap:
+        return None
+
+    sp.meta[s] = 0                      # pad rows: block 0, is_first=0
+    sp.src_global[s] = 0
+    sp.dst_local[s] = 0
+    sp.dst_global[s] = 0
+    sp.dst_label[s] = 0
+    sp.inv_cnt[s] = 0.0
+    sp.slot_raw[s] = -1
+
+    eb_off = np.concatenate([[0], np.cumsum(eb_need)])
+    labels = g.labels
+    for i, b in enumerate(blocks.tolist()):
+        lo, hi = int(lo_all[i]), int(hi_all[i])
+        c = hi - lo
+        o = int(eb_off[i]) * be
+        if c:
+            es = e_src[lo:hi]
+            ed = e_dst[lo:hi]
+            sp.src_global[s, o:o + c] = es
+            sp.dst_local[s, o:o + c] = ed - b * bn
+            sp.dst_global[s, o:o + c] = ed
+            dl = labels[ed]
+            sp.dst_label[s, o:o + c] = dl
+            sp.inv_cnt[s, o:o + c] = 1.0 / np.maximum(
+                cnt[es, dl].astype(np.float32), 1.0)
+            sp.slot_raw[s, o:o + c] = e_raw[lo:hi]
+        blk_meta = sp.meta[s, eb_off[i]:eb_off[i + 1]]
+        blk_meta[:, 0] = i              # local destination block id
+        blk_meta[0, 1] = 1              # first edge block zero-inits output
+
+    # owned labels (pad rows beyond n get -1, which never matches a prior)
+    vlo, vhi = s * sp.n_local_pad, min((s + 1) * sp.n_local_pad, g.n)
+    sp.vlabels[s] = -1
+    if vhi > vlo:
+        sp.vlabels[s, : vhi - vlo] = labels[vlo:vhi]
+
+    real = sp.slot_raw[s] >= 0
+    srcs = np.unique(sp.src_global[s][real])
+    lo_own, hi_own = s * sp.n_local_pad, (s + 1) * sp.n_local_pad
+    return srcs[(srcs < lo_own) | (srcs >= hi_own)]
+
+
+def _remap_shard_src(sp: ShardedVMPacking, s: int) -> None:
+    """Rewrite shard ``s``'s ``src_map`` against the current frontier."""
+    fr = sp.frontier[: sp.n_frontier]
+    order = np.argsort(fr, kind="stable")
+    fr_sorted = fr[order]
+    sg = sp.src_global[s].astype(np.int64)
+    owned = (sg >= s * sp.n_local_pad) & (sg < (s + 1) * sp.n_local_pad)
+    real = sp.slot_raw[s] >= 0
+    pos = np.searchsorted(fr_sorted, sg)
+    pos = np.minimum(pos, max(sp.n_frontier - 1, 0))
+    fr_idx = order[pos] if sp.n_frontier else np.zeros_like(pos)
+    remapped = np.where(owned, sg - s * sp.n_local_pad,
+                        sp.n_local_pad + fr_idx)
+    sp.src_map[s] = np.where(real, remapped, 0).astype(np.int32)
+
+
+def build_sharded_vm_packing(g, n_shards: int, cnt: np.ndarray,
+                             block_n: int = 128,
+                             block_e: int = 256) -> ShardedVMPacking:
+    """Build the stacked per-shard packing from scratch (see module doc)."""
+    S = int(n_shards)
+    if S < 1:
+        raise ValueError("n_shards must be >= 1")
+    nb = max(1, -(-g.n // block_n))
+    bps = -(-nb // S)
+    n_local_pad = bps * block_n
+
+    e_src, e_dst, e_raw = _dst_sorted_view(g)
+
+    # capacity pass: per-shard edge-block need (every block gets >= 1)
+    blocks = np.arange(S * bps, dtype=np.int64)
+    lo = np.searchsorted(e_dst, np.minimum(blocks * block_n, g.n))
+    hi = np.searchsorted(e_dst, np.minimum((blocks + 1) * block_n, g.n))
+    eb_need = np.maximum(1, -(-(hi - lo) // block_e)).reshape(S, bps)
+    eb_cap = int(eb_need.sum(axis=1).max()) + EB_SLACK
+    e_pad = eb_cap * block_e
+
+    sp = ShardedVMPacking(
+        n_shards=S, block_n=block_n, block_e=block_e,
+        blocks_per_shard=bps, n_local_pad=n_local_pad, eb_cap=eb_cap,
+        meta=np.zeros((S, eb_cap, 2), np.int32),
+        src_map=np.zeros((S, e_pad), np.int32),
+        src_global=np.zeros((S, e_pad), np.int32),
+        dst_local=np.zeros((S, e_pad), np.int32),
+        dst_global=np.zeros((S, e_pad), np.int32),
+        dst_label=np.zeros((S, e_pad), np.int32),
+        inv_cnt=np.zeros((S, e_pad), np.float32),
+        slot_raw=np.full((S, e_pad), -1, np.int64),
+        vlabels=np.full((S, n_local_pad), -1, np.int32),
+        frontier=np.empty(0, np.int64),   # placeholder until halos known
+        n_frontier=0,
+        fr_local_idx=np.empty((S, 0), np.int32),
+        fr_owned=np.empty((S, 0), np.float32),
+        version=g.version,
+    )
+
+    halos = []
+    for s in range(S):
+        halo = _fill_shard(sp, s, g, cnt, e_src, e_dst, e_raw)
+        assert halo is not None  # capacity was sized for exactly this graph
+        halos.append(halo)
+    frontier = (np.unique(np.concatenate(halos)) if halos
+                else np.empty(0, np.int64))
+    H = int(frontier.size)
+    h_pad = -(-(H + FR_SLACK) // 8) * 8
+    sp.frontier = np.zeros(h_pad, np.int64)
+    sp.frontier[:H] = frontier
+    sp.n_frontier = H
+    sp.fr_local_idx = np.zeros((S, h_pad), np.int32)
+    sp.fr_owned = np.zeros((S, h_pad), np.float32)
+    _refresh_frontier_rows(sp, np.arange(H))
+    for s in range(S):
+        _remap_shard_src(sp, s)
+    return sp
+
+
+def _refresh_frontier_rows(sp: ShardedVMPacking, positions: np.ndarray) -> None:
+    """(Re)write the owner maps for the given frontier positions."""
+    if positions.size == 0:
+        return
+    vs = sp.frontier[positions]
+    owners = (vs // sp.n_local_pad).astype(np.int64)
+    owners = np.minimum(owners, sp.n_shards - 1)
+    sp.fr_local_idx[:, positions] = 0
+    sp.fr_owned[:, positions] = 0.0
+    sp.fr_local_idx[owners, positions] = (
+        vs - owners * sp.n_local_pad).astype(np.int32)
+    sp.fr_owned[owners, positions] = 1.0
+
+
+def patch_sharded_vm_packing(sp: ShardedVMPacking, g, cnt: np.ndarray,
+                             changed_dsts: np.ndarray,
+                             changed_pairs: np.ndarray,
+                             n_old: int, old2new: np.ndarray) -> bool:
+    """Patch ``sp`` in place across one applied mutation.
+
+    ``changed_dsts`` are the destination endpoints of every added/removed
+    directed edge; ``changed_pairs`` the ``src * L + label(dst)`` keys whose
+    neighbour-label count changed; ``old2new`` the mutation's edge position
+    map (all as computed by ``apply_mutations``).  Only shards whose
+    destination blocks contain a changed endpoint (plus shards gaining
+    vertices) are refilled; fresh halo vertices are appended to the frontier
+    so every other shard's ``src_map`` stays valid.  Returns ``False`` when
+    capacity is exceeded (caller evicts and rebuilds).
+    """
+    if not g.is_symmetric():
+        return False
+    bn, bps, S = sp.block_n, sp.blocks_per_shard, sp.n_shards
+    nb_new = max(1, -(-g.n // bn))
+    if nb_new > S * bps:
+        return False                       # vertex growth exceeded capacity
+    nb_old = max(1, -(-n_old // bn))
+
+    # every shard's slot -> raw-edge map must follow the global edge
+    # renumbering (host-side only — device buffers never hold slot_raw,
+    # so this re-indexing does not dirty any shard's upload epoch)
+    ok = sp.slot_raw >= 0
+    sp.slot_raw[ok] = old2new[sp.slot_raw[ok]]
+    aff_blocks = np.unique(np.concatenate([
+        np.asarray(changed_dsts, dtype=np.int64) // bn,
+        np.arange(nb_old, nb_new, dtype=np.int64),
+    ]))
+    # vertex growth changes vlabels rows even without edges
+    grow_shards = (np.arange(n_old // sp.n_local_pad,
+                             -(-g.n // sp.n_local_pad), dtype=np.int64)
+                   if g.n > n_old else np.empty(0, np.int64))
+    aff_shards = np.unique(np.concatenate([
+        aff_blocks // bps, grow_shards]))
+    aff_shards = aff_shards[(aff_shards >= 0) & (aff_shards < S)]
+
+    e_src, e_dst, e_raw = _dst_sorted_view(g)
+    live = set(sp.frontier[: sp.n_frontier].tolist())
+    appends = set()
+    for s in aff_shards.tolist():
+        halo = _fill_shard(sp, s, g, cnt, e_src, e_dst, e_raw)
+        if halo is None:
+            return False                   # edge growth exceeded capacity
+        for v in halo.tolist():
+            if v not in live:
+                appends.add(v)
+    if appends:
+        new = np.fromiter(sorted(appends), dtype=np.int64)
+        if sp.n_frontier + new.size > sp.h_pad:
+            return False                   # frontier slack exhausted
+        pos = np.arange(sp.n_frontier, sp.n_frontier + new.size)
+        sp.frontier[pos] = new
+        sp.n_frontier += int(new.size)
+        _refresh_frontier_rows(sp, pos)
+        sp.fr_epoch += 1
+
+    for s in aff_shards.tolist():
+        _remap_shard_src(sp, s)
+        sp.shard_epoch[s] += 1
+
+    # refresh 1/cnt on slots of *unaffected* shards whose (src, dst-label)
+    # count changed (their packed structure is untouched)
+    changed_pairs = np.asarray(changed_pairs, dtype=np.int64)
+    if changed_pairs.size:
+        L = g.n_labels
+        untouched = np.setdiff1d(np.arange(S, dtype=np.int64), aff_shards)
+        for s in untouched.tolist():
+            real = sp.slot_raw[s] >= 0
+            keys = sp.src_global[s].astype(np.int64) * L + sp.dst_label[s]
+            upd = real & np.isin(keys, changed_pairs)
+            if upd.any():
+                sp.inv_cnt[s][upd] = 1.0 / np.maximum(
+                    cnt[sp.src_global[s][upd],
+                        sp.dst_label[s][upd]].astype(np.float32), 1.0)
+                sp.shard_epoch[s] += 1
+
+    sp.version = g.version
+    return True

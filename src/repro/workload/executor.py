@@ -119,18 +119,27 @@ class QueryExecutor:
 
     # -- incremental maintenance ----------------------------------------------
     def _covering_mutations(self, version: int) -> Optional[List[AppliedMutation]]:
-        """The contiguous mutation-log slice taking ``version`` to the
-        graph's current version, or None if the log no longer covers it."""
-        entries = [e for e in self.g.mutation_log
-                   if version < e.version <= self.g.version]
-        if not entries:
+        """The contiguous mutation-log chain taking ``version`` to the
+        graph's current version, or None if the log no longer covers it.
+
+        Log compaction composes old records into wider spans
+        (``version_base -> version``), so the walk chains on spans rather
+        than assuming one version per record; a snapshot that falls
+        *strictly inside* a compacted span can no longer be patched."""
+        entries = sorted(
+            (e for e in self.g.mutation_log if e.version > version),
+            key=lambda e: e.version)
+        chain: List[AppliedMutation] = []
+        cur = version
+        for e in entries:
+            if e.version_base == cur:
+                chain.append(e)
+                cur = e.version
+            elif e.version_base > cur:
+                return None  # gap: the log lost the span starting at cur
+        if not chain or cur != self.g.version:
             return None
-        versions = [e.version for e in entries]
-        if versions[0] != version + 1 or versions[-1] != self.g.version:
-            return None
-        if versions != list(range(versions[0], versions[-1] + 1)):
-            return None
-        return entries
+        return chain
 
     def _patch(self, state: _CountState) -> Optional[_CountState]:
         """Patch a stale DP state across the mutation gap, or None to force

@@ -171,17 +171,117 @@ def test_executor_patch_across_multiple_batches():
     assert np.array_equal(ex.traversals(q), QueryExecutor(g).traversals(q))
 
 
-def test_executor_rebuilds_when_log_expired():
+def test_executor_patches_across_compacted_log():
+    """Overflowing the ring no longer strands a slow consumer: the two
+    oldest records compose (``compose_mutations``), the log keeps reaching
+    back to version 0, and the patch stays bit-identical to a rebuild."""
     g = musicbrainz_like(1000, seed=5)
     q = parse_rpq("Artist.Credit.Track.Medium")
     ex = QueryExecutor(g)
     ex.traversals(q)
     rng = np.random.default_rng(2)
-    for _ in range(g.MUTATION_LOG_LIMIT + 2):  # overflow the log
+    for _ in range(g.MUTATION_LOG_LIMIT + 2):  # overflow the ring
         g.apply_mutations(MutationBatch(
             add_edges=np.stack([rng.integers(0, g.n, 4),
                                 rng.integers(0, g.n, 4)], 1)))
+    assert len(g.mutation_log) == g.MUTATION_LOG_LIMIT
+    assert g.mutation_log[0].version_base == 0  # history still rooted
+    state = ex._cache[q.qhash]
+    assert state.version == 0                   # consumer genuinely stale
+    assert ex._covering_mutations(0) is not None
     assert np.array_equal(ex.traversals(q), QueryExecutor(g).traversals(q))
+
+
+def test_mutation_log_compaction_ring_and_spans():
+    g = musicbrainz_like(600, seed=6)
+    rng = np.random.default_rng(3)
+    total = g.MUTATION_LOG_LIMIT + 7
+    for _ in range(total):
+        g.apply_mutations(MutationBatch(
+            add_edges=np.stack([rng.integers(0, g.n, 3),
+                                rng.integers(0, g.n, 3)], 1)))
+    log = g.mutation_log
+    assert len(log) == g.MUTATION_LOG_LIMIT
+    # spans are contiguous and cover version 0 .. current
+    assert log[0].version_base == 0
+    for a, b in zip(log, log[1:]):
+        assert b.version_base == a.version
+    assert log[-1].version == g.version == total
+    # the head record absorbed all the overflow
+    assert log[0].version - log[0].version_base == total - (
+        g.MUTATION_LOG_LIMIT - 1)
+
+
+def test_executor_rebuilds_when_inside_compacted_span():
+    """A snapshot strictly inside a compacted span cannot be patched; the
+    executor falls back to rebuild and still returns exact counts."""
+    g = musicbrainz_like(800, seed=7)
+    q = parse_rpq("Artist.Credit.Track.Medium")
+    rng = np.random.default_rng(4)
+    g.apply_mutations(MutationBatch(
+        add_edges=np.stack([rng.integers(0, g.n, 3),
+                            rng.integers(0, g.n, 3)], 1)))
+    ex = QueryExecutor(g)
+    ex.traversals(q)                           # snapshot at version 1
+    for _ in range(g.MUTATION_LOG_LIMIT + 3):  # version 1 gets compacted over
+        g.apply_mutations(MutationBatch(
+            add_edges=np.stack([rng.integers(0, g.n, 3),
+                                rng.integers(0, g.n, 3)], 1)))
+    assert g.mutation_log[0].version_base == 0
+    assert g.mutation_log[0].version > 1
+    assert ex._covering_mutations(1) is None
+    assert np.array_equal(ex.traversals(q), QueryExecutor(g).traversals(q))
+
+
+def test_compacted_record_bounded_under_same_edge_churn():
+    """Churning the same edges forever must not grow the head record: the
+    compose step prunes span-transient edges, so list sizes are bounded by
+    the distinct edge universe, not lifetime batch count."""
+    g = musicbrainz_like(1000, seed=9)
+    q = parse_rpq("Artist.Credit.Track.Medium")
+    ex = QueryExecutor(g)
+    ex.traversals(q)
+    und = np.stack([g.src, g.dst], 1)
+    fixed = und[und[:, 0] < und[:, 1]][:5]
+    sizes = []
+    for _ in range(3 * g.MUTATION_LOG_LIMIT):
+        g.apply_mutations(MutationBatch(add_edges=fixed, remove_edges=fixed))
+        sizes.append(int(g.mutation_log[0].removed_src.size))
+    assert sizes[-1] == sizes[2 * g.MUTATION_LOG_LIMIT]  # plateaued
+    assert sizes[-1] <= 2 * len(fixed) * 2
+    assert np.array_equal(ex.traversals(q), QueryExecutor(g).traversals(q))
+
+
+def test_compose_mutations_exact_roundtrip():
+    """Composed old2new/new_edge_pos must agree with composing by hand."""
+    from repro.graphs.graph import compose_mutations
+
+    g = musicbrainz_like(500, seed=8)
+    rng = np.random.default_rng(5)
+    batches = []
+    for _ in range(2):
+        und = np.stack([g.src, g.dst], 1)
+        und = und[und[:, 0] < und[:, 1]]
+        batches.append(g.apply_mutations(MutationBatch(
+            add_vertex_labels=rng.integers(0, g.n_labels, 2),
+            add_edges=np.stack([rng.integers(0, g.n + 2, 8),
+                                rng.integers(0, g.n + 2, 8)], 1),
+            remove_edges=und[rng.choice(len(und), 5, replace=False)])))
+    a, b = batches
+    c = compose_mutations(a, b)
+    assert c.version_base == a.version_base and c.version == b.version
+    assert c.n_before == a.n_before and c.n_after == b.n_after
+    valid = a.old2new >= 0
+    expect = np.full(a.old2new.shape[0], -1, np.int64)
+    expect[valid] = b.old2new[a.old2new[valid]]
+    assert np.array_equal(c.old2new, expect)
+    # every current edge is either mapped from the base or listed as added
+    covered = np.zeros(g.m, bool)
+    covered[c.old2new[c.old2new >= 0]] = True
+    covered[c.new_edge_pos] = True
+    assert covered.all()
+    assert np.array_equal(g.src[c.new_edge_pos], c.added_src)
+    assert np.array_equal(g.dst[c.new_edge_pos], c.added_dst)
 
 
 # ---------------------------------------------------------------------------

@@ -199,3 +199,56 @@ def test_online_ipt_under_drift_beats_hash():
         ipt_hash = ex.workload_ipt(w, hash_partition(g.n, k, seed=1))
         wins += ipt_online < ipt_hash
     assert wins >= ticks - 1  # at most one transient tick above baseline
+
+
+# ---------------------------------------------------------------------------
+# migration-cost gating of the ipt-regression trigger
+# ---------------------------------------------------------------------------
+
+
+def _regressed_online_taper(**policy_overrides):
+    """OnlineTaper with an established ipt baseline of 100.0 and every
+    trigger except ipt-regression disabled."""
+    g = musicbrainz_like(800, seed=10)
+    pol = OnlinePolicy(cadence=1000, min_interval=0, dirty_fraction=1.0,
+                       drift_l1=9e9, ipt_regression=1.2, **policy_overrides)
+    ot = OnlineTaper(g, 4, policy=pol)
+    ot.observe([MQ1, MQ3] * 30)
+    ot.invoke(reason="manual")
+    rep = ot.step(measured_ipt=100.0)   # first measurement -> baseline
+    assert not rep.invoked
+    return ot
+
+
+def test_ipt_regression_trigger_fires_without_gate():
+    ot = _regressed_online_taper()      # min_ipt_gain_per_mb=0: gate off
+    rep = ot.step(measured_ipt=200.0)   # 2x regression >= 1.2
+    assert rep.invoked and rep.reason == "ipt"
+
+
+def test_ipt_regression_gated_by_migration_cost():
+    ot = _regressed_online_taper(min_ipt_gain_per_mb=1e12)
+    rep = ot.step(measured_ipt=200.0)   # regressed, but gain/MB too small
+    assert not rep.invoked
+    # a drastic regression clears even a demanding threshold
+    mb = ot.estimated_migration_bytes() / 2**20
+    ot.policy.min_ipt_gain_per_mb = 50.0 / mb  # needs gain >= 50
+    rep = ot.step(measured_ipt=200.0)          # projected gain = 100
+    assert rep.invoked and rep.reason == "ipt"
+
+
+def test_estimated_migration_bytes_degree_proportional():
+    g = musicbrainz_like(600, seed=11)
+    ot = OnlineTaper(g, 4, policy=OnlinePolicy(migration_bytes_per_edge=64.0))
+    base = ot.estimated_migration_bytes()
+    assert base > 0
+    ot.policy.migration_bytes_per_edge = 128.0
+    assert ot.estimated_migration_bytes() == pytest.approx(2 * base)
+    # after an invocation the estimate follows the actual move count
+    ot.observe([MQ1, MQ3] * 30)
+    ot.invoke(reason="manual")
+    moves = ot._last_total_moves
+    assert moves is not None
+    avg_deg = g.m / g.n
+    assert ot.estimated_migration_bytes() == pytest.approx(
+        max(moves, 0) * avg_deg * 128.0)

@@ -1,0 +1,303 @@
+"""Sharded multi-device extroversion field: parity vs the single-device
+backends, packing invariants, and post-mutation dirty-shard patching.
+
+The suite adapts to however many devices exist: under plain tier-1 it runs
+with the single CPU device (a 1-shard mesh still exercises the shard_map +
+halo-exchange code path end to end); CI additionally runs it under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the frontier
+exchange genuinely crosses devices.
+"""
+import numpy as np
+import pytest
+
+from repro.core.rpq import parse_rpq
+from repro.core.taper import Taper, TaperConfig
+from repro.core.tpstry import TPSTry
+from repro.core.visitor import extroversion_field
+from repro.graphs.generators import musicbrainz_like, power_law_labelled
+from repro.graphs.graph import LabelledGraph, MutationBatch
+from repro.graphs.partition import hash_partition
+from repro.graphs.sharded_packing import build_sharded_vm_packing
+
+MQ1 = parse_rpq("Area.Artist.(Artist|Label).Area")
+MQ3 = parse_rpq("Artist.Credit.Track.Medium")
+
+FIELDS = ("alpha", "pr", "edge_mass", "extro_mass", "extroversion", "ext_to")
+
+
+def _n_devices() -> int:
+    import jax
+
+    return len(jax.devices())
+
+
+def _trie(g, workload=None):
+    w = workload or [(MQ1, 0.5), (MQ3, 0.5)]
+    return TPSTry.from_workload(w).compile(g.label_names)
+
+
+def _assert_field_parity(ref, sh, atol=2e-5):
+    for f in FIELDS:
+        a, b = getattr(ref, f), getattr(sh, f)
+        if a is None:
+            assert b is None
+            continue
+        np.testing.assert_allclose(a, b, atol=atol, rtol=1e-4, err_msg=f)
+    assert abs(ref.total_extroversion - sh.total_extroversion) <= max(
+        1e-4, 1e-3 * abs(ref.total_extroversion))
+
+
+# ---------------------------------------------------------------------------
+# packing invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_shards", [1, 3, 8])
+def test_sharded_packing_invariants(n_shards):
+    rng = np.random.default_rng(7)
+    n = 500
+    g = LabelledGraph.from_undirected_edges(
+        n, rng.integers(0, 5, n), rng.integers(0, n, (1400, 2)))
+    sp = g.vm_packing_sharded(n_shards, block_n=64, block_e=128)
+
+    # every real directed edge lands in exactly one slot, with its raw id
+    raw = sp.slot_raw.reshape(-1)
+    real = raw >= 0
+    assert int(real.sum()) == g.m
+    assert np.array_equal(np.sort(raw[real]), np.arange(g.m))
+    flat_src = sp.src_global.reshape(-1)[real]
+    flat_dst = sp.dst_global.reshape(-1)[real]
+    assert np.array_equal(flat_src, g.src[raw[real]])
+    assert np.array_equal(flat_dst, g.dst[raw[real]])
+
+    for s in range(n_shards):
+        r = sp.slot_raw[s] >= 0
+        # destinations are wholly shard-owned (output rows never cross)
+        assert (sp.dst_global[s][r] // sp.n_local_pad == s).all()
+        # src_map decodes back to the global source through local | frontier
+        m_ = sp.src_map[s][r]
+        own = m_ < sp.n_local_pad
+        fidx = np.maximum(m_ - sp.n_local_pad, 0)
+        dec = np.where(own, m_ + s * sp.n_local_pad, sp.frontier[fidx])
+        assert np.array_equal(dec, sp.src_global[s][r])
+        # padding slots are inert for the kernel
+        assert (sp.inv_cnt[s][~r] == 0.0).all()
+
+    # each frontier entry has exactly one owner
+    if sp.n_frontier:
+        assert (sp.fr_owned[:, : sp.n_frontier].sum(axis=0) == 1.0).all()
+    # the frontier never includes shard-interior or isolated vertices
+    assert sp.n_frontier < g.n
+
+
+def test_halo_traffic_smaller_than_full_field():
+    g = musicbrainz_like(8000, seed=5)
+    sp = g.vm_packing_sharded(8)
+    assert sp.halo_bytes_per_depth(24) < sp.full_field_bytes_per_depth(
+        g.n, 24)
+
+
+def test_sharded_packing_cached_and_version_keyed():
+    g = musicbrainz_like(600, seed=2)
+    sp1 = g.vm_packing_sharded(2)
+    assert g.vm_packing_sharded(2) is sp1
+    g.apply_mutations(MutationBatch(add_edges=[(0, 1), (1, 2), (2, 3)]))
+    sp2 = g.vm_packing_sharded(2)
+    assert sp2 is sp1               # patched in place, not rebuilt
+    assert sp2.version == g.version
+
+
+# ---------------------------------------------------------------------------
+# field parity vs the numpy/jnp backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_sharded_field_parity_random_graphs(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(200, 900))
+    g = power_law_labelled(n, n_labels=6, seed=seed)
+    arrays = _trie(g, [(parse_rpq("L0.L1.(L2|L3).L1"), 0.6),
+                       (parse_rpq("L1.L2.L0"), 0.4)])
+    k = int(rng.integers(2, 9))
+    part = hash_partition(g.n, k, seed=seed)
+    ref = extroversion_field(g, arrays, part, k, backend="jnp")
+    sh = extroversion_field(g, arrays, part, k, backend="pallas_sharded")
+    _assert_field_parity(ref, sh)
+
+
+@pytest.mark.parametrize("dense_ext_to", [True, False])
+def test_sharded_field_parity_dense_and_lazy(dense_ext_to):
+    g = musicbrainz_like(1200, seed=11)
+    arrays = _trie(g)
+    part = hash_partition(g.n, 8, seed=1)
+    ref = extroversion_field(g, arrays, part, 8, backend="jnp",
+                             dense_ext_to=dense_ext_to)
+    sh = extroversion_field(g, arrays, part, 8, backend="pallas_sharded",
+                            dense_ext_to=dense_ext_to)
+    _assert_field_parity(ref, sh)
+
+
+def test_sharded_field_parity_depth_cap():
+    g = musicbrainz_like(800, seed=12)
+    arrays = _trie(g)
+    part = hash_partition(g.n, 4, seed=2)
+    for cap in (1, 2, 3):
+        ref = extroversion_field(g, arrays, part, 4, depth_cap=cap,
+                                 backend="jnp")
+        sh = extroversion_field(g, arrays, part, 4, depth_cap=cap,
+                                backend="pallas_sharded")
+        _assert_field_parity(ref, sh)
+
+
+def test_sharded_field_parity_vs_pallas_single_device():
+    g = musicbrainz_like(900, seed=13)
+    arrays = _trie(g)
+    part = hash_partition(g.n, 8, seed=3)
+    ref = extroversion_field(g, arrays, part, 8, backend="pallas")
+    sh = extroversion_field(g, arrays, part, 8, backend="pallas_sharded")
+    _assert_field_parity(ref, sh)
+
+
+# ---------------------------------------------------------------------------
+# dirty-shard patching after mutations
+# ---------------------------------------------------------------------------
+
+
+def test_patched_packing_matches_scratch_repack():
+    g = musicbrainz_like(2500, seed=21)
+    g2 = musicbrainz_like(2500, seed=21)
+    sp = g.vm_packing_sharded(4)
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        batch = MutationBatch(
+            add_vertex_labels=rng.integers(0, g.n_labels, 2),
+            add_edges=np.stack([rng.integers(0, g.n + 2, 12),
+                                rng.integers(0, g.n + 2, 12)], 1),
+            remove_edges=[(int(g.src[i]), int(g.dst[i]))
+                          for i in rng.integers(0, g.m, 6)])
+        g.apply_mutations(batch)
+        g2.apply_mutations(batch)
+    assert g.vm_packing_sharded(4) is sp
+    scratch = build_sharded_vm_packing(
+        g2, 4, g2.cached_neighbor_label_counts())
+
+    def canon(p):
+        raw = p.slot_raw.reshape(-1)
+        ok = raw >= 0
+        o = np.argsort(raw[ok])
+        return [raw[ok][o]] + [
+            getattr(p, nm).reshape(-1)[ok][o]
+            for nm in ("src_global", "dst_global", "dst_label", "inv_cnt")]
+
+    for a, b in zip(canon(sp), canon(scratch)):
+        assert np.array_equal(a, b)
+    assert np.array_equal(sp.vlabels, scratch.vlabels)
+    # patched frontier may keep stale (harmless) entries but must cover
+    # every halo the scratch packing needs
+    assert set(scratch.frontier[: scratch.n_frontier]) <= set(
+        sp.frontier[: sp.n_frontier])
+
+
+def test_localized_mutation_dirties_few_shards():
+    g = musicbrainz_like(4000, seed=22)
+    sp = g.vm_packing_sharded(8, block_n=64)
+    epochs = sp.shard_epoch.copy()
+    # all endpoints inside the first shard's vertex range
+    lim = sp.n_local_pad
+    g.apply_mutations(MutationBatch(
+        add_edges=[(1, 5), (2, 9), (3, lim - 1)]))
+    assert g.vm_packing_sharded(8, block_n=64) is sp
+    dirty = np.nonzero(sp.shard_epoch != epochs)[0]
+    assert dirty.size >= 1
+    assert dirty.size < sp.n_shards  # the point: not a global re-pack
+
+
+def test_sharded_field_parity_after_mutation_batches():
+    g = musicbrainz_like(1500, seed=23)
+    arrays = _trie(g)
+    part = hash_partition(g.n, 4, seed=4)
+    pre = {}
+    extroversion_field(g, arrays, part, 4, _precomputed=pre,
+                       backend="pallas_sharded")
+    rebuilds0 = pre["_shard_uploads"]["rebuilds"]
+    rng = np.random.default_rng(1)
+    for _ in range(3):
+        g.apply_mutations(MutationBatch(
+            add_vertex_labels=[int(rng.integers(0, g.n_labels))],
+            add_edges=np.stack([rng.integers(0, g.n, 8),
+                                rng.integers(0, g.n, 8)], 1),
+            remove_edges=[(int(g.src[i]), int(g.dst[i]))
+                          for i in rng.integers(0, g.m, 4)]))
+        part = np.concatenate([part, [0]]).astype(np.int32)
+        ref = extroversion_field(g, arrays, part, 4, backend="jnp")
+        sh = extroversion_field(g, arrays, part, 4, _precomputed=pre,
+                                backend="pallas_sharded")
+        _assert_field_parity(ref, sh)
+    # the cached packing was patched, never rebuilt from scratch
+    assert pre["_shard_uploads"]["rebuilds"] == rebuilds0
+
+
+def test_capacity_overflow_falls_back_to_rebuild():
+    g = musicbrainz_like(400, seed=24)
+    sp = g.vm_packing_sharded(2, block_n=64)
+    # add far more vertices than the packing's block capacity can absorb
+    grow = sp.n_shards * sp.n_local_pad  # guarantees nb_new > S * bps
+    g.apply_mutations(MutationBatch(
+        add_vertex_labels=np.zeros(grow, np.int64)))
+    sp2 = g.vm_packing_sharded(2, block_n=64)
+    assert sp2 is not sp
+    assert sp2.version == g.version
+    assert sp2.n_shards * sp2.n_local_pad >= g.n
+
+
+# ---------------------------------------------------------------------------
+# driver integration
+# ---------------------------------------------------------------------------
+
+
+def test_taper_invocation_with_sharded_backend():
+    g = musicbrainz_like(1200, seed=31)
+    k = 4
+    w = [(MQ1, 0.5), (MQ3, 0.5)]
+    part0 = hash_partition(g.n, k, seed=1)
+    ref = Taper(g, k, TaperConfig(max_iterations=3, seed=0)).invoke(part0, w)
+    sh = Taper(g, k, TaperConfig(max_iterations=3, seed=0,
+                                 field_backend="pallas_sharded")
+               ).invoke(part0, w)
+    assert sh.objective[0] == pytest.approx(ref.objective[0], rel=1e-4)
+    # both must enhance; trajectories may diverge after float-tied swaps
+    assert sh.objective[-1] <= sh.objective[0]
+    assert sh.objective[-1] == pytest.approx(ref.objective[-1], rel=0.05)
+
+
+def test_online_taper_with_sharded_backend():
+    from repro.core.online import OnlinePolicy, OnlineTaper
+
+    g = musicbrainz_like(1000, seed=32)
+    ot = OnlineTaper(
+        g, 4, config=TaperConfig(max_iterations=2,
+                                 field_backend="pallas_sharded"),
+        policy=OnlinePolicy(cadence=2, min_interval=0))
+    ot.observe([MQ1] * 40)
+    assert ot.invoke(reason="manual") is not None
+    rng = np.random.default_rng(2)
+    ot.apply_mutations(MutationBatch(
+        add_vertex_labels=[1, 2],
+        add_edges=np.stack([rng.integers(0, g.n + 2, 10),
+                            rng.integers(0, g.n + 2, 10)], 1)))
+    ot.observe([MQ3] * 40)
+    rep = ot.step()
+    assert ot.part.shape[0] == g.n
+    assert (ot.part >= 0).all() and (ot.part < 4).all()
+    if rep.invoked:
+        assert rep.report is not None
+
+
+def test_smoke_mesh_matches_device_count():
+    import jax
+
+    from repro.launch.mesh import make_smoke_mesh
+
+    mesh = make_smoke_mesh()
+    assert int(mesh.shape["model"]) == _n_devices()

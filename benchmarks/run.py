@@ -22,6 +22,9 @@ CORE = [
     # multi-device field scaling; under run.py it inherits whatever device
     # count jax already initialised (run standalone for the 8-way mesh)
     "field_shard",
+    # async serving loop: overlap win vs stop-the-world + warm dirty shards
+    # (same device-count caveat as field_shard)
+    "serve_loop",
 ]
 
 # integration benchmarks: skipped (by name) only when a genuinely optional

@@ -1,0 +1,229 @@
+import os
+import sys
+
+_STANDALONE = "jax" not in sys.modules
+if _STANDALONE and "host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    # force the shard devices BEFORE jax's first init (it locks the device
+    # count); standalone runs get an 8-way host mesh, run.py invocations
+    # (jax already initialised by an earlier benchmark) keep what exists
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ.get("REPRO_SERVE_LOOP_DEVICES", "8")
+        + " " + os.environ.get("XLA_FLAGS", "")).strip()
+
+__doc__ = """Async serving loop: overlap win over stop-the-world + warm shards.
+
+Acceptance benchmark for the ``repro.serve`` subsystem.  Two engines serve
+the *same* request/mutation stream (identical seeds, identical pre-generated
+mutation schedule) with ``OnlineTaper``-triggered TAPER invocations running
+the sharded extroversion field (``field_backend="pallas_sharded"``) on an
+8-way forced-host mesh:
+
+* **async** — the production configuration: invocations execute on a
+  dedicated thread while the worker keeps serving micro-batches against the
+  old partition vector, committing with one atomic swap;
+* **sync** — the same loop with ``overlap_invocations=False``: the worker
+  blocks for every invocation (the seed-era stop-the-world engine), so the
+  bounded request queue backs up and admission rejects with retry hints.
+
+Claims measured (asserted):
+
+* sustained query throughput *during* a TAPER invocation (completions
+  inside invocation windows / in-flight seconds) is **>= 2x** the sync
+  baseline's sustained throughput on the same stream — asserted only when
+  run standalone (this module controls the device count); under
+  ``benchmarks/run.py`` the ratio is reported but not gated, like
+  ``field_shard``'s speedup target;
+* a mutation batch localized to one shard's vertex range re-uploads **only
+  the dirty shard slices** (via ``pre["_shard_uploads"]``), never the whole
+  packing (device-count independent: always asserted).
+
+Scale via ``REPRO_BENCH_N`` (default 20000), ``REPRO_SERVE_LOOP_DEVICES``
+(default 8; standalone runs only).
+"""
+
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from benchmarks.common import K, Report, workload_for
+from repro.core.online import OnlinePolicy
+from repro.core.taper import TaperConfig
+from repro.graphs.generators import musicbrainz_like
+from repro.graphs.graph import MutationBatch
+from repro.serve import ServeLoopConfig, ServingLoop
+from repro.serve.metrics import ServeMetrics
+from repro.workload.stream import GraphMutationStream, WorkloadStream
+
+BENCH_N = int(os.environ.get("REPRO_BENCH_N", "20000"))
+#: request budget of the measured phase (the sync run replays the same)
+BUDGET = int(os.environ.get("REPRO_SERVE_LOOP_REQUESTS", "600"))
+MICRO_BATCH = 16
+QUEUE_DEPTH = 128
+IN_FLIGHT = 64          # feeder keeps this many requests outstanding
+MUTATION_EVERY = 50     # submit one schedule batch per this many requests
+WARMUP = 32
+
+
+def _mutation_schedule(g, n_batches: int) -> List[MutationBatch]:
+    """Pre-generate the topology stream against a scratch copy so both
+    engines ingest the *identical* batch sequence."""
+    scratch = g.copy()
+    muts = GraphMutationStream(
+        mode="mixed", seed=7,
+        vertices_per_tick=max(2, g.n // 4000),
+        edges_per_tick=max(8, g.m // 4000))
+    out = []
+    for _ in range(n_batches):
+        b = muts.next_batch(scratch)
+        scratch.apply_mutations(b)
+        out.append(b)
+    return out
+
+
+def _make_loop(n: int, overlap: bool, mesh) -> ServingLoop:
+    g = musicbrainz_like(n, avg_degree=6.0, seed=13)
+    loop = ServingLoop(
+        g, K,
+        taper_config=TaperConfig(
+            max_iterations=3, field_backend="pallas_sharded"),
+        policy=OnlinePolicy(
+            bootstrap_after_ticks=0, cadence=6, min_interval=1,
+            dirty_fraction=0.02, drift_l1=0.6),
+        config=ServeLoopConfig(
+            micro_batch=MICRO_BATCH, max_queue_depth=QUEUE_DEPTH,
+            overlap_invocations=overlap, batch_wait_s=0.002))
+    # one shared mesh -> one jitted shard_map across both engine runs
+    loop.ot.taper._pre["_mesh"] = mesh
+    return loop
+
+
+def _submit_with_retry(loop: ServingLoop, q, rejections: List[int],
+                       max_tries: int = 1000):
+    for _ in range(max_tries):
+        t = loop.submit(q)
+        if t.accepted:
+            return t
+        rejections[0] += 1
+        time.sleep(min(t.retry_after_s, 0.02))
+    raise RuntimeError("request never admitted")
+
+
+def _drive(loop: ServingLoop, budget: int, schedule: List[MutationBatch]):
+    """Feed ``budget`` requests (top-up to IN_FLIGHT outstanding) plus the
+    mutation schedule; return (wall_s, tickets, rejections)."""
+    ws = WorkloadStream(
+        [q for q, _ in workload_for("musicbrainz")], period=6.0, seed=3)
+    tickets: List = []
+    rejections = [0]
+    sched = list(schedule)
+    t0 = time.perf_counter()
+    offered = 0
+    while offered < budget:
+        # top the in-flight window up (bounded, so the run is backlog-
+        # limited rather than dumping the whole budget into the queue)
+        pending = sum(1 for t in tickets if not t.done.is_set())
+        chunk = min(budget - offered, max(0, IN_FLIGHT - pending))
+        if chunk == 0:
+            time.sleep(0.001)
+            continue
+        ws.advance(chunk / 100.0)
+        for q in ws.sample(chunk):
+            tickets.append(_submit_with_retry(loop, q, rejections))
+        offered += chunk
+        while sched and offered >= (len(schedule) - len(sched) + 1) * MUTATION_EVERY:
+            loop.submit_mutations(sched.pop(0))
+    for t in tickets:
+        t.wait(timeout=600.0)
+    wall = time.perf_counter() - t0
+    return wall, tickets, rejections[0]
+
+
+def run(report: Optional[Report] = None, n: int = BENCH_N) -> Report:
+    import jax
+
+    from repro.launch.mesh import make_smoke_mesh
+
+    report = report or Report()
+    n_dev = len(jax.devices())
+    mesh = make_smoke_mesh()
+    schedule_len = BUDGET // MUTATION_EVERY
+
+    results = {}
+    for name, overlap in (("async", True), ("sync", False)):
+        loop = _make_loop(n, overlap, mesh)
+        schedule = _mutation_schedule(loop.g, schedule_len)
+        loop.start()
+        # warm-up: bootstrap invocation + jit compile outside the clock
+        warm = _drive(loop, WARMUP, [])
+        for t in warm[1]:
+            assert t.done.is_set()
+        while loop.invocation_in_flight:
+            time.sleep(0.005)
+        loop.metrics = ServeMetrics(loop.cfg.metrics_window)
+
+        wall, tickets, rejections = _drive(loop, BUDGET, schedule)
+        stats = loop.stop()
+        stats["wall_s"] = wall
+        stats["rejections"] = rejections
+        stats["invocations_total"] = loop.ot.invocations
+        results[name] = (loop, stats)
+        report.add(
+            f"serve_loop/{name}_serving", wall / max(stats["completed"], 1),
+            f"n={loop.g.n} devices={n_dev} completed={stats['completed']:.0f} "
+            f"invocations={stats['invocations']:.0f} "
+            f"rejected={rejections} "
+            f"p50_ms={1e3 * stats['latency_p50_s']:.2f} "
+            f"p99_ms={1e3 * stats['latency_p99_s']:.2f} "
+            f"p99_ipt={stats['ipt_p99']:.1f} "
+            f"stall_s={stats['invocation_stall_s']:.2f} "
+            f"overlap_s={stats['invocation_overlap_s']:.2f}")
+
+    a = results["async"][1]
+    s = results["sync"][1]
+    assert a["invocations"] >= 1, "async run never invoked TAPER"
+    assert s["invocations"] >= 1, "sync run never invoked TAPER"
+    # -- the overlap win ----------------------------------------------------
+    tput_during_inv = (a["completed_during_invocation"]
+                       / max(a["invocation_overlap_s"], 1e-9))
+    tput_sync = s["completed"] / max(s["wall_s"], 1e-9)
+    ratio = tput_during_inv / max(tput_sync, 1e-9)
+    report.add(
+        "serve_loop/overlap_win", 0.0,
+        f"during_invocation_qps={tput_during_inv:.1f} "
+        f"sync_sustained_qps={tput_sync:.1f} ratio={ratio:.2f}x "
+        f"target>=2x served_during_inv={a['completed_during_invocation']:.0f}")
+    if _STANDALONE:
+        assert ratio >= 2.0, (
+            f"overlapped serving during invocations must sustain >= 2x the "
+            f"stop-the-world baseline, got {ratio:.2f}x")
+
+    # -- localized ingest re-uploads only dirty shards ----------------------
+    loop = results["async"][0]           # stopped; pump inline from here
+    pre = loop.ot.taper._pre
+    ups = pre["_shard_uploads"]
+    rebuilds0, total0 = ups["rebuilds"], ups["total_shards"]
+    # first shard's vertex range, capped at real vertices (n_local_pad is
+    # block-padded and can exceed g.n on small shard counts)
+    lim = min(loop.g.vm_packing_sharded(n_dev).n_local_pad, loop.g.n)
+    rng = np.random.default_rng(0)
+    ends = rng.integers(0, max(lim - 1, 1), (8, 2))
+    loop.submit_mutations(MutationBatch(add_edges=ends))
+    loop.pump()                          # apply ingest + warm dirty shards
+    uploaded = ups["total_shards"] - total0
+    report.add(
+        "serve_loop/dirty_shard_ingest", 0.0,
+        f"dirty_shards_uploaded={uploaded}/{n_dev} "
+        f"scratch_rebuilds={ups['rebuilds'] - rebuilds0}")
+    assert ups["rebuilds"] == rebuilds0, \
+        "localized ingest must patch the packing, not re-pack from scratch"
+    assert uploaded >= 1 and (n_dev == 1 or uploaded < n_dev), (
+        f"localized ingest batch re-uploaded {uploaded}/{n_dev} shards — "
+        "expected only the dirty subset")
+    return report
+
+
+if __name__ == "__main__":
+    run().emit()

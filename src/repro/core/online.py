@@ -31,7 +31,7 @@ cap — so the partitioning never degenerates between invocations.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field as dfield
+from dataclasses import dataclass
 from typing import TYPE_CHECKING, Dict, Iterable, Optional
 
 import numpy as np
@@ -68,6 +68,16 @@ class OnlinePolicy:
     #: projected migration traffic clears this threshold.  0 disables the
     #: gate (regression ratio alone decides, the pre-PR-3 behaviour).
     min_ipt_gain_per_mb: float = 0.0
+    #: bootstrap trigger: with no invocation yet and a non-empty observed
+    #: workload, invoke once ``tick >= bootstrap_after_ticks``.  ``None``
+    #: disables it (the cadence/topology triggers decide, the historic
+    #: behaviour); serving engines set 0 so the first fit happens as soon
+    #: as traffic exists — together with the serving layer's request-based
+    #: ``first_invocation_after`` gate this replaces the legacy
+    #: ``GraphQueryEngine`` "huge counter" first-invocation sentinel.
+    #: (Deliberately tick-based and named differently from the serving
+    #: config's request-based knob.)
+    bootstrap_after_ticks: Optional[int] = None
 
 
 @dataclass
@@ -78,6 +88,34 @@ class OnlineStepReport:
     invoked: bool
     reason: str = ""
     dirty_before: int = 0
+    report: Optional[TaperReport] = None
+
+
+@dataclass
+class PendingInvocation:
+    """An invocation split into its observe/commit halves.
+
+    :meth:`OnlineTaper.begin_invocation` snapshots everything the TAPER run
+    needs (partition vector, workload, frontier, dirty mask) on the driver
+    thread; :meth:`OnlineTaper.run_invocation` may then execute on a
+    different thread — overlapping with query serving — while the driver
+    keeps serving against the *old* partition vector.  The graph must not
+    mutate while :meth:`~OnlineTaper.run_invocation` executes (serving
+    loops defer ingest while a run is in flight); mutations landing after
+    the run but before the commit are safe:
+    :meth:`OnlineTaper.commit_invocation` swaps the partition atomically,
+    grafting the enhanced snapshot-length prefix onto whatever the live
+    vector has grown to and clearing only the dirty bits the invocation
+    actually consumed — mid-flight dirt survives for the next one.
+    """
+
+    reason: str
+    tick: int
+    n_snapshot: int
+    part_snapshot: np.ndarray
+    workload: list
+    frontier: Optional[np.ndarray]
+    dirty_snapshot: np.ndarray
     report: Optional[TaperReport] = None
 
 
@@ -195,25 +233,36 @@ class OnlineTaper:
             self.part[v] = dest
             sizes[dest] += 1
 
+    def workload_drift(self, freqs: Optional[Dict[str, float]] = None) -> float:
+        """L1 distance between the sketched frequencies now and at the last
+        invocation (1.0-ish before any invocation: everything is new).
+        ``freqs`` lets a caller that already computed the sketch snapshot
+        (the per-tick policy loop) avoid recomputing it."""
+        if freqs is None:
+            freqs = self.sketch.frequencies(self.policy.min_freq)
+        keys = set(freqs) | set(self._freqs_at_invoke)
+        return sum(
+            abs(freqs.get(h, 0.0) - self._freqs_at_invoke.get(h, 0.0))
+            for h in keys)
+
     # -- the policy loop ------------------------------------------------------
     def _decide(self, measured_ipt: Optional[float]) -> Optional[str]:
         pol = self.policy
         since = self.tick - self._last_invoke_tick
         if since < pol.min_interval:
             return None
+        if (self.invocations == 0 and pol.bootstrap_after_ticks is not None
+                and self.tick >= pol.bootstrap_after_ticks):
+            return "bootstrap"
         if int(self._dirty.sum()) >= max(1, int(pol.dirty_fraction * self.g.n)):
             return "topology"
         # drift is only defined against a post-invocation baseline — before
-        # the first invocation the cadence/topology triggers decide (an
-        # empty baseline would read as ~1.0 drift on a stationary workload)
+        # the first invocation the bootstrap/cadence/topology triggers
+        # decide (an empty baseline would read as ~1.0 drift on a
+        # stationary workload)
         freqs = self.sketch.frequencies(pol.min_freq) if self.invocations else {}
-        if freqs:
-            keys = set(freqs) | set(self._freqs_at_invoke)
-            drift = sum(
-                abs(freqs.get(h, 0.0) - self._freqs_at_invoke.get(h, 0.0))
-                for h in keys)
-            if drift >= pol.drift_l1:
-                return "workload"
+        if freqs and self.workload_drift(freqs) >= pol.drift_l1:
+            return "workload"
         if (measured_ipt is not None and self._ipt_at_invoke is not None
                 and self._ipt_at_invoke > 0
                 and measured_ipt / self._ipt_at_invoke >= pol.ipt_regression
@@ -253,30 +302,42 @@ class OnlineTaper:
             return True
         return projected_gain / mb >= threshold
 
+    def poll(self, measured_ipt: Optional[float] = None) -> Optional[str]:
+        """Advance one tick and return the policy's trigger reason *without*
+        invoking — the decide-only half of :meth:`step`, for serving loops
+        that run the invocation themselves (overlapped on another thread
+        via :meth:`begin_invocation` / :meth:`commit_invocation`)."""
+        self.tick += 1
+        if (measured_ipt is not None and self._ipt_at_invoke is None
+                and self.invocations):
+            # first measurement after an invocation becomes the regression
+            # baseline (the pre-invocation measure would never trigger)
+            self._ipt_at_invoke = measured_ipt
+        return self._decide(measured_ipt)
+
     def step(self, measured_ipt: Optional[float] = None) -> OnlineStepReport:
         """Advance one tick and invoke TAPER if the policy says so.
 
         ``measured_ipt`` (optional) is the caller's current ipt measurement
         for the live partitioning — it feeds the regression trigger and is
         recorded as the post-invocation baseline."""
-        self.tick += 1
         dirty_before = int(self._dirty.sum())
-        if (measured_ipt is not None and self._ipt_at_invoke is None
-                and self.invocations):
-            # first measurement after an invocation becomes the regression
-            # baseline (the pre-invocation measure would never trigger)
-            self._ipt_at_invoke = measured_ipt
-        reason = self._decide(measured_ipt)
+        reason = self.poll(measured_ipt)
         if reason is None:
             return OnlineStepReport(self.tick, False, "", dirty_before)
         report = self.invoke(reason=reason)
         return OnlineStepReport(
             self.tick, report is not None, reason, dirty_before, report)
 
-    def invoke(self, reason: str = "manual") -> Optional[TaperReport]:
-        """Run one TAPER invocation now (policy bypassed).  Topology-
-        triggered invocations are mutation-local (frontier-seeded) when
-        ``policy.frontier_only``; other reasons use the full queue."""
+    # -- invocation lifecycle (observe -> run -> commit) ----------------------
+    def begin_invocation(
+        self, reason: str = "manual"
+    ) -> Optional[PendingInvocation]:
+        """Snapshot the inputs of one TAPER invocation (driver thread).
+
+        Returns ``None`` when there is no observed workload to fit yet.
+        Topology-triggered invocations are mutation-local (frontier-seeded)
+        when ``policy.frontier_only``; other reasons use the full queue."""
         workload = self.sketch.workload(self.policy.min_freq)
         if not workload:
             log.info("online invoke skipped: no observed workload yet")
@@ -284,9 +345,44 @@ class OnlineTaper:
         frontier = None
         if reason == "topology" and self.policy.frontier_only:
             frontier = np.nonzero(self._dirty)[0]
-        report = self.taper.invoke(self.part, workload, frontier=frontier)
-        self.part = report.final_part.astype(np.int32).copy()
-        self._dirty[:] = False
+        return PendingInvocation(
+            reason=reason,
+            tick=self.tick,
+            n_snapshot=self.g.n,
+            part_snapshot=self.part.copy(),
+            workload=workload,
+            frontier=frontier,
+            dirty_snapshot=self._dirty.copy(),
+        )
+
+    def run_invocation(self, pending: PendingInvocation) -> TaperReport:
+        """Execute the snapshotted invocation — safe on a worker thread as
+        long as the graph does not mutate until the run returns (serving
+        loops defer ingest while a run is in flight)."""
+        pending.report = self.taper.invoke(
+            pending.part_snapshot, pending.workload,
+            frontier=pending.frontier)
+        return pending.report
+
+    def commit_invocation(self, pending: PendingInvocation) -> TaperReport:
+        """Atomically publish a finished invocation (driver thread).
+
+        The live partition vector may have grown since the snapshot (greedy
+        arrival placements committed after the run finished); the enhanced
+        part covers the snapshot prefix and is grafted onto the live tail
+        in one rebind — concurrent readers see either the old vector or the
+        new one, never a torn mix.  Only the dirty bits captured at
+        :meth:`begin_invocation` are cleared: topology dirt accumulated
+        mid-flight stays for the next invocation."""
+        report = pending.report
+        if report is None:
+            raise ValueError("commit_invocation before run_invocation")
+        new_part = self.part.copy()
+        n_snap = min(pending.n_snapshot, new_part.shape[0])
+        new_part[:n_snap] = report.final_part.astype(np.int32)[:n_snap]
+        self.part = new_part  # atomic rebind: serve threads read old or new
+        ds = pending.dirty_snapshot
+        self._dirty[:ds.shape[0]] &= ~ds
         self._last_total_moves = report.total_moves
         self.invocations += 1
         self._last_invoke_tick = self.tick
@@ -294,6 +390,16 @@ class OnlineTaper:
         self._ipt_at_invoke = None  # re-baselined by the next measured step
         log.info(
             "online invoke #%d (reason=%s): %d moves, objective %.4f",
-            self.invocations, reason, report.total_moves,
+            self.invocations, pending.reason, report.total_moves,
             report.objective[-1] if report.objective else float("nan"))
         return report
+
+    def invoke(self, reason: str = "manual") -> Optional[TaperReport]:
+        """Run one TAPER invocation now, synchronously (policy bypassed):
+        :meth:`begin_invocation` -> :meth:`run_invocation` ->
+        :meth:`commit_invocation` on the calling thread."""
+        pending = self.begin_invocation(reason)
+        if pending is None:
+            return None
+        self.run_invocation(pending)
+        return self.commit_invocation(pending)

@@ -44,6 +44,10 @@ class MutationBatch:
         — all incident edges are dropped but the id slot and its label
         remain (a tombstone), so existing vertex ids, partition vectors and
         per-vertex caches never need renumbering.
+      relabel: ``(v, new_label)`` pairs re-labelling existing vertices (same-
+        batch additions included).  A vertex listed twice keeps the last
+        entry.  Relabels are applied *after* the structural changes, against
+        the post-batch adjacency.
 
     Removals are applied before additions: an edge listed in both ends up
     present.
@@ -53,6 +57,7 @@ class MutationBatch:
     add_edges: Sequence = ()
     remove_edges: Sequence = ()
     remove_vertices: Sequence[int] = ()
+    relabel: Sequence = ()
 
     @property
     def is_empty(self) -> bool:
@@ -61,6 +66,7 @@ class MutationBatch:
             or len(self.add_edges)
             or len(self.remove_edges)
             or len(self.remove_vertices)
+            or len(self.relabel)
         )
 
 
@@ -90,6 +96,13 @@ class AppliedMutation:
     #: applied batch spans one version (``version - 1 -> version``); log
     #: compaction composes adjacent records into wider spans.
     version_base: int = -1
+    #: effective vertex re-labellings: ``relabel_v[i]`` changed from
+    #: ``relabel_old[i]`` to ``relabel_new[i]`` (old != new by construction)
+    relabel_v: np.ndarray = field(default_factory=lambda: np.empty(0, np.int64))
+    relabel_old: np.ndarray = field(
+        default_factory=lambda: np.empty(0, np.int32))
+    relabel_new: np.ndarray = field(
+        default_factory=lambda: np.empty(0, np.int32))
 
     def __post_init__(self):
         if self.version_base < 0:
@@ -101,16 +114,19 @@ class AppliedMutation:
             self.n_before == self.n_after
             and self.added_src.size == 0
             and self.removed_src.size == 0
+            and self.relabel_v.size == 0
         )
 
     def dirty_vertices(self) -> np.ndarray:
-        """Unique vertex ids whose incident edge set changed (plus brand-new
-        vertices) — the seed frontier for mutation-local TAPER invocations."""
+        """Unique vertex ids whose incident edge set or label changed (plus
+        brand-new vertices) — the seed frontier for mutation-local TAPER
+        invocations."""
         parts = [
             self.added_src.astype(np.int64),
             self.added_dst.astype(np.int64),
             self.removed_src.astype(np.int64),
             self.removed_dst.astype(np.int64),
+            self.relabel_v.astype(np.int64),
             np.arange(self.n_before, self.n_after, dtype=np.int64),
         ]
         return np.unique(np.concatenate(parts))
@@ -153,6 +169,16 @@ def compose_mutations(a: AppliedMutation, b: AppliedMutation) -> AppliedMutation
     a_add_keys = np.unique(
         a.added_src.astype(np.int64) * span + a.added_dst)
     genuine = ~np.isin(b_rem_keys, a_add_keys)
+    # relabels compose pointwise: earliest old, latest new; a net no-change
+    # flip (a: x->y then b: y->x) is pruned — consumers re-derive against
+    # the final labels, so the intermediate value never matters
+    rl: Dict[int, Tuple[int, int]] = {}
+    for rec in (a, b):
+        for v, o, nw in zip(rec.relabel_v.tolist(),
+                            rec.relabel_old.tolist(),
+                            rec.relabel_new.tolist()):
+            rl[v] = (rl[v][0], nw) if v in rl else (o, nw)
+    rl_items = sorted((v, o, nw) for v, (o, nw) in rl.items() if o != nw)
     return AppliedMutation(
         version=b.version,
         n_before=a.n_before,
@@ -164,6 +190,9 @@ def compose_mutations(a: AppliedMutation, b: AppliedMutation) -> AppliedMutation
         old2new=old2new,
         new_edge_pos=new_edge_pos[order],
         version_base=a.version_base,
+        relabel_v=np.asarray([v for v, _, _ in rl_items], np.int64),
+        relabel_old=np.asarray([o for _, o, _ in rl_items], np.int32),
+        relabel_new=np.asarray([nw for _, _, nw in rl_items], np.int32),
     )
 
 
@@ -431,6 +460,24 @@ class LabelledGraph:
         labels_new = (np.concatenate([self.labels, new_labels])
                       if new_labels.size else self.labels)
 
+        # ---- relabels (validated now, applied after structural changes) --
+        rl = np.asarray(batch.relabel, dtype=np.int64).reshape(-1, 2)
+        if rl.size:
+            if rl[:, 0].min() < 0 or rl[:, 0].max() >= n_new:
+                raise ValueError("relabel vertex id out of range")
+            if rl[:, 1].min() < 0 or rl[:, 1].max() >= L:
+                raise ValueError("relabel label out of label range")
+            # a vertex listed twice keeps its last entry
+            _, last = np.unique(rl[::-1, 0], return_index=True)
+            rl = rl[rl.shape[0] - 1 - last]
+            eff = labels_new[rl[:, 0]] != rl[:, 1]
+            rl = rl[eff]
+        rl_v = rl[:, 0] if rl.size else np.empty(0, np.int64)
+        rl_new_lab = rl[:, 1].astype(np.int32) if rl.size else \
+            np.empty(0, np.int32)
+        rl_old_lab = labels_new[rl_v].astype(np.int32) if rl.size else \
+            np.empty(0, np.int32)
+
         keys_old = self.src.astype(np.int64) * n_new + self.dst
         if m_old > 1 and not (np.diff(keys_old) > 0).all():
             raise ValueError(
@@ -496,7 +543,8 @@ class LabelledGraph:
         add_s, add_d = np.divmod(add_keys, n_new)
         a = int(add_keys.size)
 
-        if a == 0 and removed_pos.size == 0 and n_new == n_old:
+        if (a == 0 and removed_pos.size == 0 and n_new == n_old
+                and rl_v.size == 0):
             # no effective change: no version bump, no log entry
             return AppliedMutation(
                 version=self.version, n_before=n_old, n_after=n_old,
@@ -570,13 +618,55 @@ class LabelledGraph:
             if a:
                 np.add.at(cnt_new, (add_s, labels_new[add_d]), 1)
 
+        # ---- apply relabels against the post-batch adjacency -------------
+        # structural count updates above used the pre-relabel labels; the
+        # relabel delta now shifts each re-labelled vertex's final in-edge
+        # contributions old->new, which composes exactly (a same-batch added
+        # edge lands at the old column first, then shifts here)
+        labels_final = labels_new
+        rl_in_src = np.empty(0, np.int64)   # sources of final in-edges of rl_v
+        rl_in_old = np.empty(0, np.int32)
+        rl_in_new = np.empty(0, np.int32)
+        if rl_v.size:
+            labels_final = labels_new.copy()
+            labels_final[rl_v] = rl_new_lab
+            old_of = np.full(n_new, -1, np.int32)
+            new_of = np.full(n_new, -1, np.int32)
+            old_of[rl_v] = rl_old_lab
+            new_of[rl_v] = rl_new_lab
+            # in-edges of the re-labelled vertices: O(deg) through the
+            # patched reverse index when the graph is symmetric (the
+            # serving ingest hot path), O(m) dst scan otherwise
+            sel = None
+            if rev_new is not None and (
+                    bool((rev_new >= 0).all()) if m_new else True):
+                starts = row_ptr_new[rl_v]
+                cnts = row_ptr_new[rl_v + 1] - starts
+                total = int(cnts.sum())
+                if total:
+                    offs = np.repeat(
+                        starts - (np.cumsum(cnts) - cnts), cnts)
+                    sel = rev_new[offs + np.arange(total, dtype=np.int64)]
+                else:
+                    sel = np.empty(0, np.int64)
+            if sel is None:
+                sel = np.nonzero(np.isin(dst_new, rl_v))[0]
+            rl_in_src = src_new[sel].astype(np.int64)
+            rl_in_old = old_of[dst_new[sel]]
+            rl_in_new = new_of[dst_new[sel]]
+            if cnt_new is not None and sel.size:
+                np.subtract.at(cnt_new, (rl_in_src, rl_in_old), 1)
+                np.add.at(cnt_new, (rl_in_src, rl_in_new), 1)
+
         # ---- patch cached vm_packing entries (block merge-patch) ---------
         changed_dsts = np.unique(np.concatenate(
-            [removed_dst.astype(np.int64), add_d]))
+            [removed_dst.astype(np.int64), add_d, rl_v]))
         changed_pairs = np.unique(np.concatenate([
             removed_src.astype(np.int64) * L
             + labels_new[removed_dst.astype(np.int64)],
             add_s * L + labels_new[add_d],
+            rl_in_src * L + rl_in_old,
+            rl_in_src * L + rl_in_new,
         ]))
         patched_entries = {}
         sharded_items = []
@@ -596,14 +686,14 @@ class LabelledGraph:
             )
             if patchable:
                 patched_entries[key] = (cnt_new, self._patch_vm_entry(
-                    key, entry, src_new, dst_new, row_ptr_new, labels_new,
+                    key, entry, src_new, dst_new, row_ptr_new, labels_final,
                     cnt_new, rev_new, n_new, changed_dsts, changed_pairs))
             # non-patchable entries (custom cnt, asymmetric graph) are
             # evicted and rebuilt lazily on next use
 
         # ---- commit ------------------------------------------------------
         self.n = n_new
-        self.labels = labels_new
+        self.labels = labels_final
         self.src = src_new
         self.dst = dst_new
         self.row_ptr = row_ptr_new
@@ -646,6 +736,9 @@ class LabelledGraph:
             removed_dst=removed_dst,
             old2new=old2new,
             new_edge_pos=new_pos_added,
+            relabel_v=rl_v.copy(),
+            relabel_old=rl_old_lab,
+            relabel_new=rl_new_lab,
         )
         self._mutation_log.append(applied)
         while len(self._mutation_log) > self.MUTATION_LOG_LIMIT:

@@ -1,3 +1,19 @@
-from repro.serve.engine import GraphQueryEngine, ServeConfig
+from repro.serve.engine import GraphQueryEngine, RequestResult, ServeConfig
+from repro.serve.ingest import IngestQueue, coalesce_mutations
+from repro.serve.loop import ServeLoopConfig, ServingLoop
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queueing import Rejection, RequestQueue, ServeTicket
 
-__all__ = ["GraphQueryEngine", "ServeConfig"]
+__all__ = [
+    "GraphQueryEngine",
+    "IngestQueue",
+    "Rejection",
+    "RequestQueue",
+    "RequestResult",
+    "ServeConfig",
+    "ServeLoopConfig",
+    "ServeMetrics",
+    "ServeTicket",
+    "ServingLoop",
+    "coalesce_mutations",
+]

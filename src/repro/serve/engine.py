@@ -1,33 +1,30 @@
-"""Online graph-query serving engine with TAPER partition maintenance.
+"""Synchronous facade over the async serving subsystem.
 
-The paper's deployment mode (§1.1 eqn. 2, §6.2.4): a partitioned graph
-serves a stream of RPQ pattern-matching queries; the engine
-
-  * executes micro-batches of requests, accounting the inter-partition
-    traversals each incurs (the latency proxy);
-  * feeds every request into the frequency sketch that backs the TPSTry;
-  * monitors drift between the sketched workload and the workload the
-    current partitioning was fitted to, and triggers a TAPER invocation
-    when drift exceeds a threshold (improving on the paper's naive
-    fixed-interval trigger, §6.2.4 "identifying effective trigger
-    conditions is left as future work" — we use sketch L1 drift).
+The original seed-era ``GraphQueryEngine`` — a private synchronous loop
+with its own L1-drift repartition trigger — is gone; this module re-derives
+the same call-and-response API as a thin shell over
+:class:`repro.serve.loop.ServingLoop` driven inline (no threads): requests
+are admitted through the bounded queue, served in micro-batches via the
+batched executor, and repartitioning is decided by ``OnlinePolicy`` /
+``OnlineTaper`` like every other consumer — the workload-drift trigger is
+``OnlinePolicy.drift_l1`` and the first fit is the policy's explicit
+``first_invocation_after`` bootstrap (replacing the old "huge counter"
+sentinel).  Use :class:`~repro.serve.loop.ServingLoop` directly for the
+threaded, invocation-overlapped deployment mode.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.online import OnlinePolicy
 from repro.core.rpq import RPQ
-from repro.core.taper import Taper, TaperConfig
-from repro.graphs.graph import LabelledGraph
-from repro.utils import get_logger
-from repro.workload.executor import QueryExecutor
+from repro.core.taper import TaperConfig
+from repro.graphs.graph import LabelledGraph, MutationBatch
+from repro.serve.loop import ServeLoopConfig, ServingLoop
 from repro.workload.sketch import FrequencySketch
-
-log = get_logger("serve.engine")
 
 
 @dataclass
@@ -36,6 +33,9 @@ class ServeConfig:
     sketch_half_life: float = 500.0
     drift_threshold: float = 0.25       # L1 distance between workloads
     min_requests_between_invocations: int = 500
+    #: completed requests before the first (bootstrap) invocation may fire
+    first_invocation_after: int = 0
+    micro_batch: int = 32
     taper: TaperConfig = field(default_factory=lambda: TaperConfig(max_iterations=4))
 
 
@@ -48,67 +48,97 @@ class RequestResult:
 
 
 class GraphQueryEngine:
+    """Blocking serve_batch API over the async engine (inline pump)."""
+
     def __init__(self, g: LabelledGraph, part: np.ndarray, k: int,
                  config: Optional[ServeConfig] = None):
-        self.g = g
-        self.part = np.asarray(part, dtype=np.int32)
-        self.k = k
         self.cfg = config or ServeConfig()
-        self.executor = QueryExecutor(g)
-        self.sketch = FrequencySketch(half_life=self.cfg.sketch_half_life)
-        self.taper = Taper(g, k, self.cfg.taper)
-        self._fitted_freqs: Dict[str, float] = {}
-        self._since_invocation = 10 ** 9
-        self.invocations = 0
-        self.total_requests = 0
-        self.total_ipt = 0.0
+        policy = OnlinePolicy(
+            # the drift trigger is the only workload-driven one the old
+            # engine had; cadence/topology/ipt stay off in the facade
+            cadence=10 ** 9,
+            min_interval=0,
+            dirty_fraction=2.0,
+            drift_l1=self.cfg.drift_threshold,
+            bootstrap_after_ticks=0,
+        )
+        self.loop = ServingLoop(
+            g, k,
+            part=np.asarray(part, dtype=np.int32),
+            taper_config=self.cfg.taper,
+            policy=policy,
+            sketch=FrequencySketch(half_life=self.cfg.sketch_half_life),
+            config=ServeLoopConfig(
+                micro_batch=self.cfg.micro_batch,
+                max_results_per_query=self.cfg.max_results_per_query,
+                min_requests_between_invocations=(
+                    self.cfg.min_requests_between_invocations),
+                first_invocation_after=self.cfg.first_invocation_after,
+                overlap_invocations=False,  # inline drive: synchronous
+            ),
+        )
+        self.g = g
+        self.k = k
+
+    # -- compatibility surface ------------------------------------------------
+    @property
+    def part(self) -> np.ndarray:
+        return self.loop.part
+
+    @property
+    def executor(self):
+        return self.loop.executor
+
+    @property
+    def sketch(self):
+        return self.loop.ot.sketch
+
+    @property
+    def invocations(self) -> int:
+        return self.loop.ot.invocations
+
+    @property
+    def total_requests(self) -> int:
+        return self.loop.metrics.completed
+
+    @property
+    def total_ipt(self) -> float:
+        return self.loop.metrics.total_ipt
 
     # -- serving -----------------------------------------------------------
     def serve_batch(self, queries: Sequence[RPQ]) -> List[RequestResult]:
-        out = []
+        """Admit, execute and account one batch of requests, blocking until
+        every result is materialised (invocations run inline)."""
+        tickets = []
         for q in queries:
-            t0 = time.perf_counter()
-            paths, crossings = self.executor.enumerate_paths(
-                q, max_results=self.cfg.max_results_per_query, part=self.part)
-            dt = time.perf_counter() - t0
-            self.sketch.observe(q)
-            self.total_requests += 1
-            self.total_ipt += crossings
-            out.append(RequestResult(q.to_text(), len(paths), crossings, dt))
-        self._since_invocation += len(queries)
-        self._maybe_repartition()
-        return out
+            admission = self.loop.submit(q)
+            while not admission.accepted:
+                # inline mode: we ARE the worker, so drain and retry rather
+                # than bouncing the rejection to the caller
+                self.loop.pump()
+                admission = self.loop.submit(q)
+            tickets.append(admission)
+        while not all(t.done.is_set() for t in tickets):
+            self.loop.pump()
+        return [
+            RequestResult(t.query.to_text(), len(t.paths), t.ipt, t.latency_s)
+            for t in tickets
+        ]
+
+    def apply_mutations(self, batch: MutationBatch) -> None:
+        """Queue a topology delta; applied before the next micro-batch."""
+        self.loop.submit_mutations(batch)
 
     # -- online maintenance --------------------------------------------------
     def workload_drift(self) -> float:
-        cur = self.sketch.frequencies()
-        keys = set(cur) | set(self._fitted_freqs)
-        return sum(abs(cur.get(k, 0.0) - self._fitted_freqs.get(k, 0.0))
-                   for k in keys)
-
-    def _maybe_repartition(self) -> None:
-        if self._since_invocation < self.cfg.min_requests_between_invocations:
-            return
-        drift = self.workload_drift()
-        if drift < self.cfg.drift_threshold:
-            return
-        workload = self.sketch.workload()
-        if not workload:
-            return
-        log.info("drift %.3f >= %.3f: invoking TAPER (%d queries)",
-                 drift, self.cfg.drift_threshold, len(workload))
-        report = self.taper.invoke(self.part, workload)
-        self.part = report.final_part
-        self._fitted_freqs = self.sketch.frequencies()
-        self._since_invocation = 0
-        self.invocations += 1
+        return self.loop.ot.workload_drift()
 
     # -- metrics -------------------------------------------------------------
     def stats(self) -> Dict:
-        return {
-            "requests": self.total_requests,
-            "total_ipt": self.total_ipt,
-            "ipt_per_request": self.total_ipt / max(self.total_requests, 1),
-            "invocations": self.invocations,
+        s = self.loop.stats()
+        s.update({
+            "requests": s["completed"],
+            "invocations": self.loop.ot.invocations,
             "drift": self.workload_drift(),
-        }
+        })
+        return s

@@ -1,0 +1,337 @@
+"""Asynchronous graph-query serving loop with overlapped TAPER invocations.
+
+The subsystem's control flow (see ``serve/README.md`` for the full
+architecture note):
+
+* **request path** — clients :meth:`ServingLoop.submit` RPQ requests into a
+  bounded :class:`~repro.serve.queueing.RequestQueue`; the worker drains
+  them in micro-batches and executes each batch through
+  ``QueryExecutor.enumerate_paths_many`` (shared per-query enumeration
+  plans) against the *current* partition vector;
+* **ingest path** — topology deltas enter a bounded
+  :class:`~repro.serve.ingest.IngestQueue`; the worker drains and coalesces
+  them between invocations, applies them through
+  ``LabelledGraph.apply_mutations`` (merge-patching every derived cache)
+  and, under the ``pallas_sharded`` field backend, immediately re-uploads
+  the dirty shard slices so device state stays warm before the next
+  invocation;
+* **invocation overlap** — every served micro-batch advances one
+  ``OnlineTaper`` tick; when the policy fires, the invocation's inputs are
+  snapshotted (``begin_invocation``) and the extroversion-field/swap run
+  executes on a dedicated thread over the device mesh while the worker
+  keeps serving against the **old** partition vector (double buffering).
+  On completion the worker commits: one atomic rebind of the partition
+  vector (readers see old or new, never a torn mix).  Ingest is deferred
+  while a run is in flight — the graph must stay immutable under the field
+  evaluation — which is exactly when the ingest queue's backpressure
+  engages;
+* **metrics** — per-request ipt and latency percentiles, queue depths and
+  invocation stall/overlap accounting via
+  :class:`~repro.serve.metrics.ServeMetrics`, exported as plain dicts.
+
+``overlap_invocations=False`` degrades the same loop to the stop-the-world
+baseline (the invocation runs inline on the worker, serving stalls) — the
+comparison ``benchmarks/serve_loop.py`` quantifies.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.core.online import OnlinePolicy, OnlineTaper, PendingInvocation
+from repro.core.rpq import RPQ
+from repro.core.taper import TaperConfig
+from repro.graphs.graph import LabelledGraph, MutationBatch
+from repro.serve.ingest import IngestQueue
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queueing import Rejection, RequestQueue, ServeTicket
+from repro.utils import get_logger
+from repro.workload.executor import QueryExecutor
+
+log = get_logger("serve.loop")
+
+
+@dataclass
+class ServeLoopConfig:
+    micro_batch: int = 16
+    max_queue_depth: int = 256
+    max_ingest_depth: int = 64
+    max_results_per_query: int = 32
+    #: run TAPER invocations on a dedicated thread, overlapped with serving
+    #: (False = stop-the-world: the worker blocks for the whole invocation)
+    overlap_invocations: bool = True
+    #: minimum completed requests between consecutive invocations
+    min_requests_between_invocations: int = 0
+    #: completed requests before the first (bootstrap) invocation may fire
+    first_invocation_after: int = 0
+    #: how long an idle worker waits for requests before re-polling
+    batch_wait_s: float = 0.005
+    metrics_window: int = 2048
+
+
+class ServingLoop:
+    """Micro-batched serving engine over one mutable graph (module doc)."""
+
+    def __init__(
+        self,
+        g: LabelledGraph,
+        k: int,
+        part: Optional[np.ndarray] = None,
+        taper_config: Optional[TaperConfig] = None,
+        policy: Optional[OnlinePolicy] = None,
+        config: Optional[ServeLoopConfig] = None,
+        sketch=None,
+    ):
+        self.cfg = config or ServeLoopConfig()
+        if policy is None:
+            # serving loops bootstrap their first fit from live traffic
+            policy = OnlinePolicy(bootstrap_after_ticks=0)
+        self.ot = OnlineTaper(
+            g, k, part=part, config=taper_config, policy=policy,
+            sketch=sketch)
+        self.g = g
+        self.k = k
+        self.executor = QueryExecutor(g)
+        self.requests = RequestQueue(self.cfg.max_queue_depth)
+        self.ingest = IngestQueue(self.cfg.max_ingest_depth)
+        self.metrics = ServeMetrics(self.cfg.metrics_window)
+        self._pending: Optional[PendingInvocation] = None
+        self._inflight: Optional[threading.Thread] = None
+        self._invocation_done = threading.Event()
+        self._invocation_t0 = 0.0
+        self._invocation_error: Optional[BaseException] = None
+        self._worker_error: Optional[BaseException] = None
+        self._requests_since_invocation = 0
+        self._ipt_ewma: Optional[float] = None
+        self._stop = threading.Event()
+        self._worker: Optional[threading.Thread] = None
+
+    # -- client API -----------------------------------------------------------
+    @property
+    def part(self) -> np.ndarray:
+        """The live partition vector (atomically rebound on commit)."""
+        return self.ot.part
+
+    def submit(self, query: RPQ) -> Union[ServeTicket, Rejection]:
+        """Admit one request (any thread); see ``RequestQueue.submit``."""
+        return self.requests.submit(query)
+
+    def submit_mutations(self, batch: MutationBatch) -> Union[bool, Rejection]:
+        """Queue one topology delta (any thread); applied by the worker
+        between invocations."""
+        return self.ingest.submit(batch)
+
+    def stats(self) -> Dict[str, float]:
+        return self.metrics.snapshot(
+            queue_depth=self.requests.depth(),
+            ingest_depth=self.ingest.depth(),
+            rejected_requests=self.requests.rejected,
+            rejected_mutations=self.ingest.rejected,
+            failed_mutations=self.ingest.failed,
+        )
+
+    @property
+    def invocation_in_flight(self) -> bool:
+        return self._pending is not None
+
+    # -- lifecycle ------------------------------------------------------------
+    def start(self) -> "ServingLoop":
+        """Spawn the worker thread (threaded mode).  Alternatively drive the
+        loop inline — no threads — by calling :meth:`pump` directly."""
+        if self._worker is not None:
+            raise RuntimeError("serving loop already started")
+        self._stop.clear()
+        self._worker = threading.Thread(
+            target=self._run, name="serve-worker", daemon=True)
+        self._worker.start()
+        return self
+
+    def stop(self, drain: bool = True) -> Dict[str, float]:
+        """Stop the worker; optionally drain queued requests/ingest first.
+        Returns a final metrics snapshot.  Raises only when the *latest*
+        invocation failed (earlier transient failures are counted in
+        ``invocation_failures`` and logged when they happen, so a recovered
+        blip does not surface as a stale exception hours later)."""
+        self._stop.set()
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+        self._finish_inflight()
+        if drain:
+            while self._pump_once(wait_s=0.0, allow_trigger=False):
+                pass
+            self._apply_ingest()
+        if self._worker_error is not None:
+            raise self._worker_error
+        if self._invocation_error is not None:
+            raise self._invocation_error
+        return self.stats()
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self._pump_once(wait_s=self.cfg.batch_wait_s,
+                                allow_trigger=True)
+                self._worker_error = None   # healthy round: blip recovered
+            except BaseException as exc:
+                # a dead worker would silently wedge every outstanding
+                # ticket; log, remember for stop() (cleared again by the
+                # next healthy round, so only a *current* fault surfaces
+                # there), and keep serving — the backoff stops a
+                # persistent fault from spinning hot
+                self._worker_error = exc
+                log.exception("serve worker round failed")
+                time.sleep(self.cfg.batch_wait_s)
+        self._finish_inflight()
+
+    # -- one scheduling round -------------------------------------------------
+    def pump(self, wait_s: float = 0.0) -> int:
+        """Inline drive: one scheduling round on the calling thread.
+        Returns the number of requests served this round."""
+        return self._pump_once(wait_s=wait_s, allow_trigger=True)
+
+    def _pump_once(self, wait_s: float, allow_trigger: bool) -> int:
+        self._commit_if_done()
+        if self._pending is None:
+            self._apply_ingest()
+        batch = self.requests.take_batch(self.cfg.micro_batch, timeout=wait_s)
+        if batch:
+            self._serve_batch(batch)
+            if allow_trigger:
+                self._maybe_trigger()
+        self._commit_if_done()
+        return len(batch)
+
+    def _serve_batch(self, batch: List[ServeTicket]) -> None:
+        overlapped = (self._inflight is not None
+                      and not self._invocation_done.is_set())
+        queries = [t.query for t in batch]
+        part = self.ot.part  # one read: stable for the whole micro-batch
+        t0 = time.perf_counter()
+        results = self.executor.enumerate_paths_many(
+            queries, max_results=self.cfg.max_results_per_query, part=part)
+        dt = time.perf_counter() - t0
+        for ticket, (paths, crossings) in zip(batch, results):
+            ticket.complete(paths, crossings)
+        self.requests.record_service_time(dt / len(batch))
+        self.metrics.record_batch(
+            [t.latency_s for t in batch], [t.ipt for t in batch], overlapped)
+        self.ot.observe(queries)
+        self._requests_since_invocation += len(batch)
+        mean_ipt = float(np.mean([t.ipt for t in batch]))
+        self._ipt_ewma = (mean_ipt if self._ipt_ewma is None
+                          else 0.8 * self._ipt_ewma + 0.2 * mean_ipt)
+
+    # -- invocation scheduling ------------------------------------------------
+    def _maybe_trigger(self) -> None:
+        reason = self.ot.poll(self._ipt_ewma)  # one tick per micro-batch
+        if reason is None or self._pending is not None:
+            return
+        if self.ot.invocations == 0:
+            if self.metrics.completed < self.cfg.first_invocation_after:
+                return
+        elif (self._requests_since_invocation
+                < self.cfg.min_requests_between_invocations):
+            return
+        pending = self.ot.begin_invocation(reason)
+        if pending is None:
+            return
+        self._pending = pending
+        if self.cfg.overlap_invocations:
+            self._invocation_done.clear()
+            self._invocation_error = None   # only the latest run's outcome
+            self._invocation_t0 = time.perf_counter()
+            self._inflight = threading.Thread(
+                target=self._invocation_main, name="serve-invocation",
+                daemon=True)
+            self._inflight.start()
+        else:
+            t0 = time.perf_counter()
+            try:
+                self.ot.run_invocation(pending)
+            finally:
+                # a failed run must not leave the loop looking mid-flight
+                # (that would disable ingest and all future invocations);
+                # the exception still propagates — to the inline caller, or
+                # to _run's guard in threaded mode
+                self._pending = None
+            wall = time.perf_counter() - t0
+            self.ot.commit_invocation(pending)
+            self.metrics.record_invocation(wall, overlapped=False)
+            self._requests_since_invocation = 0
+
+    def _invocation_main(self) -> None:
+        try:
+            self.ot.run_invocation(self._pending)
+        except BaseException as exc:  # surfaced by stop() if still latest
+            self._invocation_error = exc
+            self.metrics.record_invocation_failure()
+            log.exception("overlapped TAPER invocation failed")
+        finally:
+            self._invocation_done.set()
+
+    def _commit_if_done(self) -> None:
+        if self._inflight is None or not self._invocation_done.is_set():
+            return
+        self._inflight.join()
+        wall = time.perf_counter() - self._invocation_t0
+        if self._pending is not None and self._pending.report is not None:
+            self.ot.commit_invocation(self._pending)
+            self.metrics.record_invocation(wall, overlapped=True)
+        self._pending = None
+        self._inflight = None
+        self._requests_since_invocation = 0
+
+    def _finish_inflight(self) -> None:
+        if self._inflight is not None:
+            self._invocation_done.wait()
+            self._commit_if_done()
+
+    # -- ingest ---------------------------------------------------------------
+    def _apply_ingest(self) -> None:
+        applied = 0
+        for merged, members in self.ingest.drain_groups():
+            try:
+                self.ot.apply_mutations(merged)
+                applied += 1
+                continue
+            except ValueError:
+                # a malformed producer batch poisoned the fold; apply the
+                # member batches individually so only the bad one is lost
+                # (apply_mutations validates before touching any state, so
+                # the failed fold left the graph untouched)
+                log.exception(
+                    "coalesced ingest group failed validation; retrying "
+                    "its %d member batches individually", len(members))
+            for b in members:
+                try:
+                    self.ot.apply_mutations(b)
+                    applied += 1
+                except ValueError:
+                    self.ingest.failed += 1
+                    log.exception("dropping malformed ingest batch")
+        if applied:
+            self._warm_devices()
+
+    def _warm_devices(self) -> None:
+        """Stream the freshly patched dirty shards onto the mesh now, off
+        the invocation's critical path, so the next overlapped field
+        evaluation starts from warm device buffers."""
+        taper = self.ot.taper
+        if taper.config.field_backend != "pallas_sharded":
+            return
+        import jax
+
+        from repro.core.visitor import _sharded_device_arrays
+
+        pre = taper._pre
+        mesh = pre.get("_mesh")
+        n_shards = (int(mesh.shape["model"]) if mesh is not None
+                    else len(jax.devices()))
+        sp = self.g.vm_packing_sharded(
+            n_shards, cnt=self.g.cached_neighbor_label_counts())
+        _sharded_device_arrays(sp, pre)

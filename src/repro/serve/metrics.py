@@ -1,0 +1,119 @@
+"""Serving metrics / SLO accounting, exported as plain dicts.
+
+Latency and per-request ipt are tracked in bounded sliding windows (the
+most recent ``window`` samples) so p50/p99 reflect current behaviour, not
+the lifetime average; counters (requests, rejections, invocations, stalls)
+are monotonic.  ``ServeMetrics.snapshot()`` is the only export surface —
+a flat dict of floats/ints that benchmarks and dashboards can consume
+without importing anything from this package."""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List
+
+
+class SlidingWindow:
+    """Bounded ring of float samples with exact percentiles over the ring."""
+
+    def __init__(self, window: int = 2048):
+        self._buf: List[float] = []
+        self._pos = 0
+        self._window = int(window)
+
+    def record(self, x: float) -> None:
+        if len(self._buf) < self._window:
+            self._buf.append(float(x))
+        else:
+            self._buf[self._pos] = float(x)
+            self._pos = (self._pos + 1) % self._window
+
+    def percentile(self, p: float) -> float:
+        if not self._buf:
+            return 0.0
+        s = sorted(self._buf)
+        idx = min(len(s) - 1, max(0, int(round(p / 100.0 * (len(s) - 1)))))
+        return s[idx]
+
+    def mean(self) -> float:
+        return sum(self._buf) / len(self._buf) if self._buf else 0.0
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+
+class ServeMetrics:
+    """Counters + windows for the serving loop.  All mutators take the
+    internal lock, so the worker, invocation and admission threads can
+    report concurrently; ``snapshot`` returns a consistent copy."""
+
+    def __init__(self, window: int = 2048):
+        self._lock = threading.Lock()
+        self.latency = SlidingWindow(window)
+        self.request_ipt = SlidingWindow(window)
+        self.completed = 0
+        self.batches = 0
+        self.total_ipt = 0.0
+        self.invocations = 0
+        #: wall seconds the worker was *blocked* in synchronous invocations
+        #: (stop-the-world mode; 0 under full overlap)
+        self.invocation_stall_s = 0.0
+        #: wall seconds invocations spent in flight concurrently with serving
+        self.invocation_overlap_s = 0.0
+        #: requests completed while an invocation was in flight
+        self.completed_during_invocation = 0
+        self.partition_swaps = 0
+        self.invocation_failures = 0
+
+    def record_invocation_failure(self) -> None:
+        with self._lock:
+            self.invocation_failures += 1
+
+    def record_batch(self, latencies, ipts, overlapped: bool) -> None:
+        with self._lock:
+            self.batches += 1
+            for lat, ipt in zip(latencies, ipts):
+                self.latency.record(lat)
+                self.request_ipt.record(float(ipt))
+                self.completed += 1
+                self.total_ipt += float(ipt)
+                if overlapped:
+                    self.completed_during_invocation += 1
+
+    def record_invocation(self, wall_s: float, overlapped: bool) -> None:
+        with self._lock:
+            self.invocations += 1
+            self.partition_swaps += 1
+            if overlapped:
+                self.invocation_overlap_s += float(wall_s)
+            else:
+                self.invocation_stall_s += float(wall_s)
+
+    def snapshot(self, queue_depth: int = 0, ingest_depth: int = 0,
+                 rejected_requests: int = 0, rejected_mutations: int = 0,
+                 failed_mutations: int = 0) -> Dict[str, float]:
+        """Flat dict of the current SLO picture (plain python scalars)."""
+        with self._lock:
+            c = max(self.completed, 1)
+            return {
+                "completed": self.completed,
+                "batches": self.batches,
+                "rejected_requests": rejected_requests,
+                "rejected_mutations": rejected_mutations,
+                "failed_mutations": failed_mutations,
+                "queue_depth": queue_depth,
+                "ingest_depth": ingest_depth,
+                "total_ipt": self.total_ipt,
+                "ipt_per_request": self.total_ipt / c,
+                "ipt_p50": self.request_ipt.percentile(50),
+                "ipt_p99": self.request_ipt.percentile(99),
+                "latency_p50_s": self.latency.percentile(50),
+                "latency_p99_s": self.latency.percentile(99),
+                "latency_mean_s": self.latency.mean(),
+                "invocations": self.invocations,
+                "invocation_failures": self.invocation_failures,
+                "invocation_stall_s": self.invocation_stall_s,
+                "invocation_overlap_s": self.invocation_overlap_s,
+                "completed_during_invocation":
+                    self.completed_during_invocation,
+                "partition_swaps": self.partition_swaps,
+            }

@@ -1,0 +1,136 @@
+"""Bounded admission queue with micro-batching and backpressure.
+
+The request path of the serving subsystem (see ``serve/README.md``): callers
+:meth:`RequestQueue.submit` individual RPQ requests; admission is O(1) and
+either returns a :class:`ServeTicket` (a completion handle the caller can
+wait on) or — when the queue is at ``max_depth`` — a :class:`Rejection`
+carrying a *retry hint*: the estimated time for the current backlog to
+drain, derived from an EWMA of recent per-request service time.  Rejecting
+at admission instead of queueing unboundedly is what turns an overloaded
+serving loop into backpressure the client can act on.
+
+The serving loop drains requests in *micro-batches*
+(:meth:`RequestQueue.take_batch`): up to ``max_batch`` requests leave
+together so the executor can share per-query enumeration work across the
+batch (``QueryExecutor.enumerate_paths_many``)."""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple, Union
+
+from repro.core.rpq import RPQ
+
+
+@dataclass
+class Rejection:
+    """Admission refused: the queue is full.  ``retry_after_s`` estimates
+    when the backlog will have drained enough to admit again."""
+
+    retry_after_s: float
+    queue_depth: int
+    reason: str = "queue_full"
+
+    @property
+    def accepted(self) -> bool:
+        return False
+
+
+@dataclass
+class ServeTicket:
+    """Completion handle for one admitted request."""
+
+    query: RPQ
+    submitted_s: float
+    done: threading.Event = field(default_factory=threading.Event)
+    paths: Optional[List[Tuple[int, ...]]] = None
+    ipt: int = 0
+    latency_s: float = 0.0
+
+    @property
+    def accepted(self) -> bool:
+        return True
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self.done.wait(timeout)
+
+    def complete(self, paths, ipt: int) -> None:
+        self.paths = paths
+        self.ipt = int(ipt)
+        self.latency_s = time.perf_counter() - self.submitted_s
+        self.done.set()
+
+
+class RequestQueue:
+    """Thread-safe bounded FIFO of :class:`ServeTicket` with micro-batch
+    draining and a service-rate EWMA for retry hints."""
+
+    def __init__(self, max_depth: int = 256, ewma_alpha: float = 0.2,
+                 initial_service_s: float = 1e-3):
+        if max_depth < 1:
+            raise ValueError("max_depth must be >= 1")
+        self.max_depth = int(max_depth)
+        self._items: List[ServeTicket] = []
+        self._lock = threading.Lock()
+        self._nonempty = threading.Condition(self._lock)
+        self._ewma_alpha = float(ewma_alpha)
+        # seeded optimistic; the first completed batches correct it
+        self._service_s = float(initial_service_s)
+        self.submitted = 0
+        self.rejected = 0
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, query: RPQ) -> Union[ServeTicket, Rejection]:
+        """Admit one request or reject with a backlog-drain retry hint."""
+        with self._lock:
+            depth = len(self._items)
+            if depth >= self.max_depth:
+                self.rejected += 1
+                return Rejection(
+                    retry_after_s=max(depth, 1) * self._service_s,
+                    queue_depth=depth)
+            ticket = ServeTicket(query=query, submitted_s=time.perf_counter())
+            self._items.append(ticket)
+            self.submitted += 1
+            self._nonempty.notify()
+            return ticket
+
+    # -- draining ------------------------------------------------------------
+    def take_batch(self, max_batch: int,
+                   timeout: Optional[float] = 0.0) -> List[ServeTicket]:
+        """Remove and return up to ``max_batch`` requests (FIFO order).
+
+        ``timeout=0`` (the default) polls; ``timeout > 0`` blocks up to that
+        many seconds for the queue to become non-empty; ``timeout=None``
+        blocks until a request arrives.  Returns whatever is queued the
+        moment it is non-empty — micro-batches fill from backlog, they do
+        not wait to fill up, so an idle system serves single requests at
+        low latency.
+        """
+        with self._nonempty:
+            if not self._items:
+                if timeout is None:
+                    while not self._items:
+                        self._nonempty.wait()
+                elif timeout > 0:
+                    self._nonempty.wait(timeout)
+            batch = self._items[:max_batch]
+            del self._items[:len(batch)]
+            return batch
+
+    def record_service_time(self, per_request_s: float) -> None:
+        """Fold one batch's measured per-request service time into the EWMA
+        that backs admission retry hints."""
+        a = self._ewma_alpha
+        with self._lock:
+            self._service_s = (1 - a) * self._service_s + a * float(
+                per_request_s)
+
+    def depth(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+    @property
+    def estimated_service_s(self) -> float:
+        return self._service_s

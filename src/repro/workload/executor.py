@@ -49,6 +49,20 @@ class _CountState:
     steps: List[Tuple[int, int, int]]  # (node, parent, label), depth order
 
 
+@dataclass
+class _EnumPlan:
+    """Graph-independent enumeration plan for one query: the label-id
+    target strings, their prefix closure and the admissible first labels.
+    Depends only on (query, label_names) — label ids are stable across
+    topology mutations and relabels — so plans are shared across the
+    requests of a serving micro-batch and across graph versions."""
+
+    targets: frozenset       # of tuple(label_id, ...)
+    prefixes: frozenset
+    first_labels: np.ndarray  # unique admissible first label ids
+    max_len: int
+
+
 def _count_full(g: LabelledGraph, depth1, steps, n_trie: int) -> Tuple[np.ndarray, np.ndarray]:
     """Full traversal-count DP over the whole edge list (the rebuild path)."""
     n, m = g.n, g.m
@@ -76,11 +90,16 @@ class QueryExecutor:
     otherwise.  Both paths produce bit-identical counts.
     """
 
+    #: bound on the per-query enumeration-plan cache (each plan is a few
+    #: small python sets; the bound only guards pathological workloads)
+    PLAN_CACHE_LIMIT = 256
+
     def __init__(self, g: LabelledGraph, star_max: int = 3, max_len: Optional[int] = None):
         self.g = g
         self.star_max = star_max
         self.max_len = max_len
         self._cache: Dict[str, _CountState] = {}
+        self._plan_cache: Dict[str, "_EnumPlan"] = {}
 
     def traversals(self, q: RPQ) -> np.ndarray:
         """(m,) float64 — number of times each directed edge is traversed
@@ -179,8 +198,21 @@ class QueryExecutor:
         is_mapped[surv_new] = True
         added_pos = np.nonzero(~is_mapped)[0]
 
+        # net re-labellings across the gap: earliest old, latest new; a
+        # round-trip flip nets out (consumers re-derive vs final labels)
+        rl_net: Dict[int, Tuple[int, int]] = {}
+        for e in entries:
+            for v, o, nw in zip(e.relabel_v.tolist(), e.relabel_old.tolist(),
+                                e.relabel_new.tolist()):
+                rl_net[v] = (rl_net[v][0], nw) if v in rl_net else (o, nw)
+        rl_items = sorted(
+            (v, o) for v, (o, nw) in rl_net.items()
+            if o != nw and v < n_before)  # >= n_before: already conservative
+        rl_v = np.asarray([v for v, _ in rl_items], dtype=np.int64)
+        rl_old = np.asarray([o for _, o in rl_items], dtype=np.int64)
+
         # structural dirty endpoints (vertex ids are stable across versions)
-        seed_dst: List[np.ndarray] = [g.dst[added_pos].astype(np.int64)]
+        seed_dst: List[np.ndarray] = [g.dst[added_pos].astype(np.int64), rl_v]
         for e in entries:
             seed_dst.append(e.removed_dst.astype(np.int64))
         seed_dst_all = np.unique(np.concatenate(seed_dst)) if seed_dst else \
@@ -201,6 +233,28 @@ class QueryExecutor:
         rev = g.reverse_edge_index
         src, dst = g.src, g.dst
         touched: List[np.ndarray] = [added_pos]
+        if rl_v.size:
+            # depth-1 base case of every re-labelled vertex follows its
+            # final label directly
+            for i, li in state.depth1:
+                newv = (labels[rl_v] == li).astype(np.float64)
+                diff = newv != cnt[rl_v, i]
+                changed[rl_v[diff], i] = True
+                cnt[rl_v, i] = newv
+            # deeper nodes gated on the *old* label go to zero now (the
+            # vertex no longer matches); nodes gated on the new label are
+            # re-derived by the seeded step loop below.  Marking `changed`
+            # up front is safe: the loop only ever adds marks, and a zeroed
+            # count is the vertex's final value for that node.
+            for c, par, lc in state.steps:
+                vs = rl_v[(rl_old == lc) & (labels[rl_v] != lc)]
+                if vs.size:
+                    stale = cnt[vs, c] != 0.0
+                    changed[vs[stale], c] = True
+                    cnt[vs, c] = 0.0
+            # every in-edge of a re-labelled vertex carries a (src-state,
+            # dst-label) contribution whose label test flipped
+            touched.append(rev[g.edge_indices_of(rl_v)])
         for c, par, lc in state.steps:
             dirty_src = np.nonzero(changed[:, par])[0]
             eidx = g.edge_indices_of(dirty_src) if dirty_src.size else \
@@ -254,6 +308,29 @@ class QueryExecutor:
         return sum(f * self.ipt(q, part) for q, f in workload)
 
     # -- path materialisation (serving) ---------------------------------------
+    def _enum_plan(self, q: RPQ) -> _EnumPlan:
+        """Cached enumeration plan (see :class:`_EnumPlan`)."""
+        qh = q.qhash
+        plan = self._plan_cache.get(qh)
+        if plan is None:
+            strings = q.strings(self.max_len or 32, self.star_max)
+            name_to_id = {s: i for i, s in enumerate(self.g.label_names)}
+            targets = frozenset(
+                tuple(name_to_id[s] for s in st)
+                for st in strings if all(x in name_to_id for x in st))
+            prefixes = frozenset(
+                tuple(t[:i]) for t in targets for i in range(1, len(t) + 1))
+            plan = _EnumPlan(
+                targets=targets,
+                prefixes=prefixes,
+                first_labels=np.asarray(
+                    sorted({t[0] for t in targets}), dtype=np.int64),
+                max_len=max((len(t) for t in targets), default=0))
+            while len(self._plan_cache) >= self.PLAN_CACHE_LIMIT:
+                self._plan_cache.pop(next(iter(self._plan_cache)))
+            self._plan_cache[qh] = plan
+        return plan
+
     def enumerate_paths(
         self, q: RPQ, max_results: int = 100, part: Optional[np.ndarray] = None
     ) -> Tuple[List[Tuple[int, ...]], int]:
@@ -264,25 +341,18 @@ class QueryExecutor:
         paths only (the serving engine's per-request accounting).
         """
         g = self.g
-        trie = self._compile(q)
-        # terminal nodes: label strings in str(Q) == nodes whose path is a
-        # complete string; conservatively: leaves, plus any node marked by
-        # string set membership
-        strings = q.strings(self.max_len or 32, self.star_max)
+        plan = self._enum_plan(q)
+        targets, prefixes = plan.targets, plan.prefixes
+        max_len = plan.max_len
         results: List[Tuple[int, ...]] = []
         crossings = 0
 
-        name_to_id = {s: i for i, s in enumerate(g.label_names)}
-        targets = {tuple(name_to_id[s] for s in st) for st in strings if all(x in name_to_id for x in st)}
-        max_len = max((len(t) for t in targets), default=0)
-
-        # DFS from every vertex matching a first label
-        first_labels = {t[0] for t in targets}
-        prefixes = {tuple(t[:i]) for t in targets for i in range(1, len(t) + 1)}
-        stack: List[Tuple[Tuple[int, ...], Tuple[int, ...]]] = []
-        for v in range(g.n):
-            if g.labels[v] in first_labels:
-                stack.append(((int(v),), (int(g.labels[v]),)))
+        # DFS from every vertex matching a first label (ascending id order,
+        # so the LIFO exploration order matches the per-vertex scan)
+        starts = np.nonzero(np.isin(g.labels, plan.first_labels))[0]
+        stack: List[Tuple[Tuple[int, ...], Tuple[int, ...]]] = [
+            ((int(v),), (int(g.labels[v]),)) for v in starts
+        ]
         while stack and len(results) < max_results:
             path, labs = stack.pop()
             if labs in targets:
@@ -300,6 +370,37 @@ class QueryExecutor:
                 if nl in prefixes:
                     stack.append((path + (int(u),), nl))
         return results, crossings
+
+    def enumerate_paths_many(
+        self,
+        queries: Sequence[RPQ],
+        max_results: int = 100,
+        part: Optional[np.ndarray] = None,
+    ) -> List[Tuple[List[Tuple[int, ...]], int]]:
+        """Batched :meth:`enumerate_paths` over one serving micro-batch.
+
+        The trie-expansion/plan work (``str(Q)`` strings, prefix closure,
+        start-vertex scan, DFS) is shared across the batch: each *distinct*
+        query is enumerated once and its result fanned out to every request
+        position that asked for it — the common serving case of a hot query
+        repeated within a micro-batch pays one enumeration.  Results are
+        positionally aligned with ``queries`` and identical to calling
+        :meth:`enumerate_paths` per query.
+        """
+        out: List[Optional[Tuple[List[Tuple[int, ...]], int]]] = \
+            [None] * len(queries)
+        by_hash: Dict[str, List[int]] = {}
+        for i, q in enumerate(queries):
+            by_hash.setdefault(q.qhash, []).append(i)
+        for idxs in by_hash.values():
+            paths, ipt = self.enumerate_paths(
+                queries[idxs[0]], max_results=max_results, part=part)
+            out[idxs[0]] = (paths, ipt)
+            for i in idxs[1:]:
+                # fresh list per position: duplicate requests must not
+                # alias one mutable result (the path tuples are immutable)
+                out[i] = (list(paths), ipt)
+        return out
 
 
 def ipt_of_partition(

@@ -136,6 +136,91 @@ def test_stale_vm_packing_not_served(paper_graph):
 
 
 # ---------------------------------------------------------------------------
+# vertex re-labelling
+# ---------------------------------------------------------------------------
+
+
+def test_relabel_patches_caches(paper_graph):
+    g = paper_graph.subgraph_mask(np.ones(6, bool))
+    _seed_caches(g)
+    v0 = g.version
+    old = int(g.labels[2])
+    new = (old + 1) % g.n_labels
+    applied = g.apply_mutations(MutationBatch(relabel=[(2, new)]))
+    assert g.version == v0 + 1
+    assert int(g.labels[2]) == new
+    assert np.array_equal(applied.relabel_v, [2])
+    assert applied.relabel_old[0] == old and applied.relabel_new[0] == new
+    assert 2 in applied.dirty_vertices()
+    _assert_full_parity(g)
+
+
+def test_relabel_same_label_is_noop(paper_graph):
+    g = paper_graph.subgraph_mask(np.ones(6, bool))
+    v0 = g.version
+    applied = g.apply_mutations(
+        MutationBatch(relabel=[(3, int(g.labels[3]))]))
+    assert applied.is_noop and g.version == v0
+    assert len(g.mutation_log) == 0
+
+
+def test_relabel_last_entry_wins_and_validates(paper_graph):
+    g = paper_graph.subgraph_mask(np.ones(6, bool))
+    old = int(g.labels[1])
+    new = (old + 1) % g.n_labels
+    g.apply_mutations(MutationBatch(relabel=[(1, old), (1, new)]))
+    assert int(g.labels[1]) == new
+    with pytest.raises(ValueError, match="label range"):
+        g.apply_mutations(MutationBatch(relabel=[(1, g.n_labels)]))
+    with pytest.raises(ValueError, match="vertex id"):
+        g.apply_mutations(MutationBatch(relabel=[(g.n, 0)]))
+
+
+def test_relabel_mixed_with_structural_same_batch(paper_graph):
+    g = paper_graph.subgraph_mask(np.ones(6, bool))
+    _seed_caches(g)
+    # add a vertex, rewire, and relabel both an old vertex and the new one
+    g.apply_mutations(MutationBatch(
+        add_vertex_labels=[0],
+        add_edges=[(6, 1), (6, 4)],
+        remove_edges=[(1, 2)],
+        relabel=[(0, (int(g.labels[0]) + 1) % g.n_labels), (6, 1)]))
+    assert int(g.labels[6]) == 1
+    _assert_full_parity(g)
+
+
+def test_relabel_executor_patch_matches_rebuild():
+    g = musicbrainz_like(1200, seed=21)
+    q = parse_rpq("Artist.Credit.Track.Medium")
+    ex = QueryExecutor(g)
+    ex.traversals(q)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        vs = rng.choice(g.n, size=5, replace=False)
+        g.apply_mutations(MutationBatch(
+            relabel=[(int(v), int(rng.integers(0, g.n_labels)))
+                     for v in vs]))
+        assert np.array_equal(ex.traversals(q), QueryExecutor(g).traversals(q))
+
+
+def test_relabel_executor_patch_across_compacted_log():
+    """Relabels compose across ring compaction like structural deltas."""
+    g = musicbrainz_like(600, seed=22)
+    q = parse_rpq("Area.Artist.(Artist|Label).Area")
+    ex = QueryExecutor(g)
+    ex.traversals(q)     # snapshot at version 0
+    rng = np.random.default_rng(1)
+    for _ in range(g.MUTATION_LOG_LIMIT + 4):
+        v = int(rng.integers(0, g.n))
+        g.apply_mutations(MutationBatch(
+            relabel=[(v, int(rng.integers(0, g.n_labels)))],
+            add_edges=[(int(rng.integers(0, g.n)),
+                        int(rng.integers(0, g.n)))]))
+    assert len(g.mutation_log) == g.MUTATION_LOG_LIMIT
+    assert np.array_equal(ex.traversals(q), QueryExecutor(g).traversals(q))
+
+
+# ---------------------------------------------------------------------------
 # executor delta-aware cache
 # ---------------------------------------------------------------------------
 
@@ -290,7 +375,7 @@ def test_compose_mutations_exact_roundtrip():
 # ---------------------------------------------------------------------------
 
 
-def _random_batch(g, rng, nv, na, nr, rem_v):
+def _random_batch(g, rng, nv, na, nr, rem_v, nrl=0):
     und = np.stack([g.src, g.dst], 1)
     und = und[und[:, 0] < und[:, 1]]
     nr = min(nr, len(und))
@@ -299,9 +384,13 @@ def _random_batch(g, rng, nv, na, nr, rem_v):
     hi = g.n + nv
     add = (np.stack([rng.integers(0, hi, na), rng.integers(0, hi, na)], 1)
            if na else np.zeros((0, 2), np.int64))
+    relabel = (np.stack([rng.integers(0, hi, nrl),
+                         rng.integers(0, g.n_labels, nrl)], 1)
+               if nrl else np.zeros((0, 2), np.int64))
     return MutationBatch(
         add_vertex_labels=rng.integers(0, g.n_labels, nv),
-        add_edges=add, remove_edges=remove, remove_vertices=rem_v)
+        add_edges=add, remove_edges=remove, remove_vertices=rem_v,
+        relabel=relabel)
 
 
 @pytest.mark.parametrize("seed", range(8))
@@ -318,6 +407,7 @@ def test_random_mutation_batches_bitwise_parity(seed):
         g.apply_mutations(_random_batch(
             g, rng,
             nv=int(rng.integers(0, 5)), na=int(rng.integers(0, 13)),
-            nr=int(rng.integers(0, 13)), rem_v=rem_v))
+            nr=int(rng.integers(0, 13)), rem_v=rem_v,
+            nrl=int(rng.integers(0, 4))))
         g.validate()
         _assert_full_parity(g, queries=[(ex, q)])

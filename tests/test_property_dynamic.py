@@ -32,7 +32,7 @@ def mutation_scenario(draw):
     seed = draw(st.integers(0, 2**16))
     specs = draw(st.lists(
         st.tuples(st.integers(0, 4), st.integers(0, 12), st.integers(0, 12),
-                  st.booleans()),
+                  st.booleans(), st.integers(0, 3)),
         min_size=1, max_size=3))
     return n, seed, specs
 
@@ -47,8 +47,8 @@ def test_random_mutation_batches_bitwise_parity(scenario):
     _seed_caches(g)
     ex = QueryExecutor(g)
     ex.traversals(q)
-    for nv, na, nr, drop_vertex in specs:
+    for nv, na, nr, drop_vertex, nrl in specs:
         rem_v = [int(rng.integers(0, g.n))] if drop_vertex else []
-        g.apply_mutations(_random_batch(g, rng, nv, na, nr, rem_v))
+        g.apply_mutations(_random_batch(g, rng, nv, na, nr, rem_v, nrl=nrl))
         g.validate()
         _assert_full_parity(g, queries=[(ex, q)])

@@ -1,0 +1,405 @@
+"""Async serving subsystem: queue semantics, ingest coalescing, atomic
+partition swap under mid-invocation mutations, batched enumeration parity,
+and the threaded serving loop end to end."""
+import numpy as np
+import pytest
+
+from repro.core.online import OnlinePolicy, OnlineTaper
+from repro.core.rpq import parse_rpq
+from repro.core.taper import TaperConfig
+from repro.graphs.generators import musicbrainz_like, power_law_labelled
+from repro.graphs.graph import LabelledGraph, MutationBatch
+from repro.graphs.partition import hash_partition
+from repro.serve import (
+    GraphQueryEngine,
+    IngestQueue,
+    RequestQueue,
+    ServeConfig,
+    ServeLoopConfig,
+    ServingLoop,
+    coalesce_mutations,
+)
+from repro.workload.executor import QueryExecutor
+
+MQ1 = parse_rpq("Area.Artist.(Artist|Label).Area")
+MQ3 = parse_rpq("Artist.Credit.Track.Medium")
+
+
+# ---------------------------------------------------------------------------
+# request queue: bounded admission, backpressure, micro-batching
+# ---------------------------------------------------------------------------
+
+
+def test_request_queue_backpressure_rejects_with_retry_hint():
+    q = RequestQueue(max_depth=4)
+    tickets = [q.submit(MQ1) for _ in range(4)]
+    assert all(t.accepted for t in tickets)
+    rej = q.submit(MQ1)
+    assert not rej.accepted
+    assert rej.reason == "queue_full"
+    assert rej.queue_depth == 4
+    assert rej.retry_after_s > 0
+    assert q.rejected == 1
+    # the hint scales with the measured service rate
+    q.record_service_time(1.0)
+    slow = q.submit(MQ1)
+    assert slow.retry_after_s > rej.retry_after_s
+    # draining frees capacity
+    q.take_batch(2)
+    assert q.submit(MQ1).accepted
+
+
+def test_request_queue_micro_batch_is_fifo():
+    q = RequestQueue(max_depth=16)
+    t1, t2, t3 = q.submit(MQ1), q.submit(MQ3), q.submit(MQ1)
+    batch = q.take_batch(2)
+    assert batch == [t1, t2]
+    assert q.take_batch(2) == [t3]
+    assert q.take_batch(2, timeout=0) == []
+
+
+def test_ingest_queue_backpressure():
+    iq = IngestQueue(max_depth=2)
+    assert iq.submit(MutationBatch(add_edges=[(0, 1)])) is True
+    assert iq.submit(MutationBatch(add_edges=[(1, 2)])) is True
+    rej = iq.submit(MutationBatch(add_edges=[(2, 3)]))
+    assert not rej.accepted and rej.reason == "ingest_full"
+    assert iq.rejected == 1
+
+
+# ---------------------------------------------------------------------------
+# ingest coalescing: order-aware fold == sequential apply, bitwise
+# ---------------------------------------------------------------------------
+
+
+def _apply_all(g: LabelledGraph, batches):
+    for b in batches:
+        g.apply_mutations(b)
+
+
+def _assert_graphs_equal(g1: LabelledGraph, g2: LabelledGraph):
+    assert g1.n == g2.n
+    assert np.array_equal(g1.labels, g2.labels)
+    assert np.array_equal(g1.src, g2.src)
+    assert np.array_equal(g1.dst, g2.dst)
+    assert np.array_equal(g1.row_ptr, g2.row_ptr)
+
+
+def test_coalesce_order_add_then_remove_is_absent():
+    g1 = power_law_labelled(60, n_labels=3, avg_degree=4.0, seed=1)
+    g2 = g1.copy()
+    batches = [
+        MutationBatch(add_edges=[(0, 9)]),
+        MutationBatch(remove_edges=[(0, 9)]),
+    ]
+    merged = coalesce_mutations(batches)
+    assert len(merged) == 1  # no conflict: one batch
+    _apply_all(g1, batches)
+    _apply_all(g2, merged)
+    assert 9 not in g1.neighbors(0)
+    _assert_graphs_equal(g1, g2)
+
+
+def test_coalesce_order_remove_then_add_is_present():
+    g1 = power_law_labelled(60, n_labels=3, avg_degree=4.0, seed=2)
+    # pick an existing edge so the removal is effective
+    u, w = int(g1.src[0]), int(g1.dst[0])
+    g2 = g1.copy()
+    batches = [
+        MutationBatch(remove_edges=[(u, w)]),
+        MutationBatch(add_edges=[(u, w)]),
+    ]
+    merged = coalesce_mutations(batches)
+    assert len(merged) == 1
+    _apply_all(g1, batches)
+    _apply_all(g2, merged)
+    assert w in g1.neighbors(u)
+    _assert_graphs_equal(g1, g2)
+
+
+def test_coalesce_splits_on_add_after_vertex_removal():
+    g1 = power_law_labelled(60, n_labels=3, avg_degree=4.0, seed=3)
+    g2 = g1.copy()
+    batches = [
+        MutationBatch(remove_vertices=[5]),
+        MutationBatch(add_edges=[(5, 11)]),  # re-attach the tombstone
+    ]
+    merged = coalesce_mutations(batches)
+    assert len(merged) == 2  # one batch would drop the re-attachment
+    _apply_all(g1, batches)
+    _apply_all(g2, merged)
+    assert 11 in g1.neighbors(5)
+    _assert_graphs_equal(g1, g2)
+
+
+def test_coalesce_relabel_last_wins_and_new_vertices_align():
+    g1 = power_law_labelled(60, n_labels=4, avg_degree=4.0, seed=4)
+    g2 = g1.copy()
+    batches = [
+        MutationBatch(add_vertex_labels=[1], add_edges=[(60, 2)],
+                      relabel=[(7, 0)]),
+        MutationBatch(add_vertex_labels=[2], add_edges=[(61, 60)],
+                      relabel=[(7, 3), (60, 0)]),
+    ]
+    merged = coalesce_mutations(batches)
+    assert len(merged) == 1
+    _apply_all(g1, batches)
+    _apply_all(g2, merged)
+    assert int(g1.labels[7]) == 3 and int(g1.labels[60]) == 0
+    _assert_graphs_equal(g1, g2)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_coalesce_random_stream_parity(seed):
+    rng = np.random.default_rng(seed)
+    g1 = power_law_labelled(80, n_labels=4, avg_degree=5.0, seed=seed)
+    g2 = g1.copy()
+    batches = []
+    n_virtual = g1.n
+    for _ in range(6):
+        nv = int(rng.integers(0, 3))
+        hi = n_virtual + nv
+        batches.append(MutationBatch(
+            add_vertex_labels=rng.integers(0, 4, nv),
+            add_edges=np.stack([rng.integers(0, hi, 6),
+                                rng.integers(0, hi, 6)], 1),
+            remove_edges=np.stack([rng.integers(0, n_virtual, 4),
+                                   rng.integers(0, n_virtual, 4)], 1),
+            remove_vertices=(
+                [int(rng.integers(0, n_virtual))]
+                if rng.random() < 0.4 else []),
+            relabel=(
+                [(int(rng.integers(0, n_virtual)), int(rng.integers(0, 4)))]
+                if rng.random() < 0.5 else []),
+        ))
+        n_virtual = hi
+    _apply_all(g1, batches)
+    _apply_all(g2, coalesce_mutations(batches))
+    _assert_graphs_equal(g1, g2)
+
+
+# ---------------------------------------------------------------------------
+# atomic partition swap (double buffering) under a mid-invocation mutation
+# ---------------------------------------------------------------------------
+
+
+def test_commit_grafts_snapshot_onto_grown_partition():
+    g = musicbrainz_like(900, seed=3)
+    ot = OnlineTaper(g, 4, policy=OnlinePolicy(),
+                     config=TaperConfig(max_iterations=2))
+    ot.observe([MQ1, MQ3] * 30)
+    n0 = g.n
+    pending = ot.begin_invocation("manual")
+    assert pending is not None and pending.n_snapshot == n0
+    old_part = ot.part
+    rep = ot.run_invocation(pending)
+    # a mutation lands after the run finished but before the commit: two
+    # new vertices (greedily placed) and fresh topology dirt
+    applied = ot.apply_mutations(MutationBatch(
+        add_vertex_labels=[0, 1], add_edges=[(n0, 0), (n0 + 1, 2), (3, 4)]))
+    assert ot.part.shape == (n0 + 2,)
+    tail = ot.part[n0:].copy()
+    ot.commit_invocation(pending)
+    # the swap covers the full live length: enhanced prefix + live tail
+    assert ot.part.shape == (n0 + 2,)
+    assert np.array_equal(ot.part[:n0], rep.final_part[:n0])
+    assert np.array_equal(ot.part[n0:], tail)
+    assert ot.invocations == 1
+    # the old vector object is untouched (readers holding it see a
+    # consistent pre-swap view — double buffering, not in-place writes)
+    assert old_part.shape == (n0,)
+    # mid-invocation dirt survives the commit for the next invocation
+    dirty = applied.dirty_vertices()
+    assert ot._dirty[dirty[dirty < ot._dirty.shape[0]]].any()
+
+
+def test_overlapped_loop_defers_ingest_until_commit():
+    g = musicbrainz_like(700, seed=5)
+    loop = ServingLoop(
+        g, 4,
+        taper_config=TaperConfig(max_iterations=2),
+        policy=OnlinePolicy(bootstrap_after_ticks=0, cadence=10 ** 9,
+                            dirty_fraction=2.0, drift_l1=9e9),
+        config=ServeLoopConfig(micro_batch=8, overlap_invocations=True))
+    for _ in range(8):
+        loop.submit(MQ1)
+    n0 = g.n
+    # inline pump: serves one micro-batch and launches the (overlapped)
+    # bootstrap invocation on its thread
+    loop.pump()
+    assert loop.invocation_in_flight
+    # a mutation submitted mid-invocation is queued, not applied
+    loop.submit_mutations(MutationBatch(add_vertex_labels=[0],
+                                        add_edges=[(n0, 1)]))
+    assert g.n == n0  # graph untouched while the field eval runs
+    loop._finish_inflight()          # wait + commit
+    assert not loop.invocation_in_flight
+    assert loop.ot.invocations == 1
+    assert g.n == n0                 # ingest still deferred until a pump
+    loop.pump()
+    assert g.n == n0 + 1             # applied after the commit
+    assert loop.part.shape == (n0 + 1,)
+    loop.stop()
+
+
+# ---------------------------------------------------------------------------
+# batched enumeration parity
+# ---------------------------------------------------------------------------
+
+
+def test_enumerate_paths_many_matches_per_query():
+    g = musicbrainz_like(800, seed=7)
+    part = hash_partition(g.n, 4, seed=1)
+    ex = QueryExecutor(g)
+    queries = [MQ1, MQ3, MQ1, MQ1, MQ3]  # duplicates share one enumeration
+    many = ex.enumerate_paths_many(queries, max_results=16, part=part)
+    assert len(many) == len(queries)
+    for q, (paths, ipt) in zip(queries, many):
+        ref_paths, ref_ipt = ex.enumerate_paths(q, max_results=16, part=part)
+        assert paths == ref_paths
+        assert ipt == ref_ipt
+
+
+def test_enumeration_plan_survives_mutations():
+    g = musicbrainz_like(500, seed=8)
+    ex = QueryExecutor(g)
+    ex.enumerate_paths(MQ1, max_results=8)   # warm the plan cache
+    ex.enumerate_paths(MQ3, max_results=8)
+    new_lab = (int(g.labels[0]) + 1) % g.n_labels
+    g.apply_mutations(MutationBatch(relabel=[(0, new_lab)],
+                                    add_edges=[(0, 7)]))
+    fresh = QueryExecutor(g)
+    for q in (MQ1, MQ3):
+        # cached plan is label-id based: still valid across graph versions
+        assert ex.enumerate_paths(q, max_results=8) == \
+            fresh.enumerate_paths(q, max_results=8)
+
+
+# ---------------------------------------------------------------------------
+# threaded serving loop end to end
+# ---------------------------------------------------------------------------
+
+
+def test_threaded_loop_serves_and_invokes():
+    g = musicbrainz_like(900, seed=9)
+    loop = ServingLoop(
+        g, 4,
+        taper_config=TaperConfig(max_iterations=2),
+        config=ServeLoopConfig(micro_batch=8, max_queue_depth=512,
+                               batch_wait_s=0.002)).start()
+    tickets = []
+    for i in range(60):
+        t = loop.submit(MQ1 if i % 3 else MQ3)
+        assert t.accepted
+        tickets.append(t)
+    loop.submit_mutations(MutationBatch(add_vertex_labels=[1],
+                                        add_edges=[(g.n, 0), (g.n, 5)]))
+    for t in tickets:
+        assert t.wait(timeout=30.0)
+    stats = loop.stop()
+    assert stats["completed"] == 60
+    assert loop.ot.invocations >= 1
+    assert loop.part.shape == (g.n,)
+    assert (loop.part >= 0).all() and (loop.part < 4).all()
+    for key in ("latency_p50_s", "latency_p99_s", "ipt_p99",
+                "ipt_per_request", "queue_depth", "invocation_overlap_s",
+                "invocation_stall_s", "partition_swaps"):
+        assert key in stats
+    assert stats["latency_p99_s"] >= stats["latency_p50_s"]
+
+
+def test_malformed_ingest_batch_does_not_kill_the_loop():
+    g = musicbrainz_like(500, seed=15)
+    loop = ServingLoop(
+        g, 4,
+        taper_config=TaperConfig(max_iterations=2),
+        config=ServeLoopConfig(micro_batch=8)).start()
+    m0 = g.m
+    # a valid batch and a malformed one (out-of-range id) coalesce into one
+    # fold; the loop must drop only the bad member and keep the good one
+    w = next(v for v in range(1, g.n)
+             if v not in set(g.neighbors(0).tolist()))
+    loop.submit_mutations(MutationBatch(add_edges=[(0, w)]))
+    loop.submit_mutations(MutationBatch(relabel=[(g.n + 5, 0)]))
+    tickets = [loop.submit(MQ1) for _ in range(10)]
+    for t in tickets:
+        assert t.wait(timeout=30.0)   # worker survived and kept serving
+    stats = loop.stop()
+    assert stats["completed"] == 10
+    assert stats["failed_mutations"] == 1
+    assert g.m == m0 + 2              # the valid member still landed
+
+
+def test_stop_the_world_mode_records_stalls():
+    g = musicbrainz_like(600, seed=11)
+    loop = ServingLoop(
+        g, 4,
+        taper_config=TaperConfig(max_iterations=2),
+        config=ServeLoopConfig(micro_batch=8, overlap_invocations=False))
+    tickets = [loop.submit(MQ1) for _ in range(10)]
+    while not all(t.done.is_set() for t in tickets):
+        loop.pump()
+    stats = loop.stop()
+    assert loop.ot.invocations >= 1
+    assert stats["invocation_stall_s"] > 0      # serving blocked
+    assert stats["invocation_overlap_s"] == 0.0
+
+
+def test_sharded_warm_path_uploads_only_dirty_shards():
+    jax = pytest.importorskip("jax")
+    g = musicbrainz_like(700, seed=12)
+    loop = ServingLoop(
+        g, 4,
+        taper_config=TaperConfig(max_iterations=2,
+                                 field_backend="pallas_sharded"),
+        policy=OnlinePolicy(bootstrap_after_ticks=0, cadence=10 ** 9,
+                            dirty_fraction=2.0, drift_l1=9e9),
+        config=ServeLoopConfig(micro_batch=8, overlap_invocations=False))
+    tickets = [loop.submit(MQ1) for _ in range(10)]
+    while not all(t.done.is_set() for t in tickets):
+        loop.pump()
+    assert loop.ot.invocations == 1     # bootstrap ran the sharded field
+    pre = loop.ot.taper._pre
+    ups = pre["_shard_uploads"]
+    n_shards = len(jax.devices())
+    total0 = ups["total_shards"]
+    # a mutation localized to the first shard's vertex range: the warm path
+    # re-uploads only the dirty shard slice(s), not the whole packing
+    loop.submit_mutations(MutationBatch(add_edges=[(0, 2), (1, 3)]))
+    loop.pump()
+    assert ups["rebuilds"] == 1         # patched in place, never re-packed
+    uploaded = ups["total_shards"] - total0
+    assert uploaded >= 1
+    assert n_shards == 1 or uploaded < n_shards
+    loop.stop()
+
+
+def test_first_invocation_after_gates_bootstrap():
+    g = musicbrainz_like(600, seed=14)
+    eng = GraphQueryEngine(
+        g, hash_partition(g.n, 4, seed=1), 4,
+        ServeConfig(first_invocation_after=15, max_results_per_query=4))
+    eng.serve_batch([MQ1] * 10)
+    assert eng.invocations == 0      # below the configured request floor
+    eng.serve_batch([MQ1] * 10)
+    assert eng.invocations == 1      # bootstrap fires once past it
+
+
+def test_facade_engine_routes_mutations_and_stats():
+    g = musicbrainz_like(600, seed=13)
+    eng = GraphQueryEngine(
+        g, hash_partition(g.n, 4, seed=1), 4,
+        ServeConfig(min_requests_between_invocations=20,
+                    max_results_per_query=4))
+    out = eng.serve_batch([MQ1] * 10)
+    assert len(out) == 10
+    n0 = g.n
+    eng.apply_mutations(MutationBatch(add_vertex_labels=[2],
+                                      add_edges=[(n0, 1)]))
+    eng.serve_batch([MQ3] * 10)
+    assert g.n == n0 + 1
+    assert eng.part.shape == (n0 + 1,)
+    s = eng.stats()
+    assert s["requests"] == 20
+    assert s["invocations"] >= 1
+    assert "ipt_p99" in s and "latency_p99_s" in s

@@ -83,6 +83,9 @@ class Row:
     name: str
     us_per_call: float
     derived: str
+    #: machine-readable measurements (speedups, ratios, counts) — the
+    #: ``run.py --json`` export; the ``derived`` string stays human-first
+    metrics: Dict[str, object] = field(default_factory=dict)
 
 
 class Report:
@@ -91,8 +94,9 @@ class Report:
     def __init__(self):
         self.rows: List[Row] = []
 
-    def add(self, name: str, seconds: float, derived: str) -> None:
-        self.rows.append(Row(name, seconds * 1e6, derived))
+    def add(self, name: str, seconds: float, derived: str,
+            metrics: Optional[Dict[str, object]] = None) -> None:
+        self.rows.append(Row(name, seconds * 1e6, derived, dict(metrics or {})))
 
     def timeit(self, name: str, fn: Callable, derived_fn: Callable[[object], str]):
         t0 = time.perf_counter()
@@ -110,6 +114,18 @@ class Report:
         text = buf.getvalue()
         print(text if fh is None else text, file=fh, end="")
         return text
+
+    def to_json(self) -> Dict[str, object]:
+        """Machine-readable export (``benchmarks/run.py --json PATH``)."""
+        return {
+            "bench_n": BENCH_N,
+            "k": K,
+            "rows": [
+                {"name": r.name, "us_per_call": round(r.us_per_call, 1),
+                 "derived": r.derived, "metrics": r.metrics}
+                for r in self.rows
+            ],
+        }
 
 
 def taper_for(g: LabelledGraph, **overrides) -> Taper:

@@ -2,10 +2,17 @@
 
 Prints ``name,us_per_call,derived`` CSV (plus roofline/dry-run summaries if
 artifacts exist).  Scale via REPRO_BENCH_N (default 20000 vertices).
+
+``--json PATH`` additionally writes the full report machine-readable —
+every row with its structured ``metrics`` dict (speedups, halo ratios,
+throughputs) plus the run's scale/device context — so successive PRs leave
+a comparable ``BENCH_*.json`` perf trajectory in the repo.
 """
 from __future__ import annotations
 
+import argparse
 import importlib
+import json
 import sys
 import traceback
 
@@ -53,17 +60,35 @@ def load_modules():
     return modules
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the report (rows + per-row metrics "
+                         "dicts + run context) as JSON to PATH")
+    args = ap.parse_args(argv)
+
     report = Report()
     failures = 0
+    ran = []
     for name, mod in load_modules():
         try:
             mod.run(report)
+            ran.append(name)
         except Exception:
             failures += 1
             print(f"BENCHMARK {name} FAILED:", file=sys.stderr)
             traceback.print_exc()
     report.emit()
+    if args.json:
+        doc = report.to_json()
+        doc["modules"] = ran
+        doc["failures"] = failures
+        if "jax" in sys.modules:
+            doc["devices"] = len(sys.modules["jax"].devices())
+        with open(args.json, "w") as fh:
+            json.dump(doc, fh, indent=1, sort_keys=False)
+            fh.write("\n")
+        print(f"wrote {args.json}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

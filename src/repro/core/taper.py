@@ -51,6 +51,20 @@ class TaperConfig:
     #: kernel, single device) or "pallas_sharded" (vm_step per mesh shard
     #: with frontier halo exchange — scales the field with device count)
     field_backend: str = "jnp"
+    #: sharded backend only — how vertices are dealt to mesh shards:
+    #: "stripe" (contiguous id ranges), "partition" (dealt along the live
+    #: TAPER partition vector, k -> S folded; OnlineTaper re-deals on
+    #: commit) or "bfs" (locality order for graphs with no partition yet)
+    shard_map_source: str = "stripe"
+    #: sharded backend only — per-depth halo collective: "sliced" (hot
+    #: broadcast rows + per-shard-pair ring slices; bytes scale with what
+    #: each shard reads) or "psum" (the union-frontier fallback for meshes
+    #: where the ring rounds lose)
+    halo_exchange: str = "sliced"
+    #: skip a commit-time shard re-deal when fewer than this fraction of
+    #: vertices would change shard (avoids repacking churn on converged
+    #: partitions)
+    redeal_min_moved_frac: float = 0.01
     star_max: int = 3
     trie_max_len: Optional[int] = None
     seed: int = 0
@@ -121,6 +135,7 @@ class Taper:
         # (trie, partition) pair can hit, and one ExtroversionResult is
         # O(n*N + m + n*k) floats — don't pin more than one
         self._field_memo: Optional[Tuple[Tuple, ExtroversionResult]] = None
+        self._redeal_counter = 0
 
     def __del__(self):
         # release this instance's snapshot slot on a shared, long-lived trie
@@ -166,6 +181,78 @@ class Taper:
             mask[g.dst[g.edge_indices_of(vs)].astype(np.int64)] = True
         return mask
 
+    def _mesh_shards(self) -> int:
+        """Shard count of the field mesh (``model`` axis; defaults to every
+        visible device, matching ``_pallas_sharded_field``)."""
+        mesh = self._pre.get("_mesh")
+        if mesh is not None:
+            return int(mesh.shape["model"])
+        import jax
+
+        return len(jax.devices())
+
+    def _seed_shard_order(self, part: np.ndarray) -> None:
+        """Resolve the sticky shard map now (idempotent) so the field memo
+        key is stable from the first evaluation on."""
+        cfg = self.config
+        if (cfg.field_backend != "pallas_sharded"
+                or cfg.shard_map_source == "stripe"
+                or "_shard_order" in self._pre):
+            return
+        from repro.graphs.sharded_packing import compute_shard_order
+
+        self._pre["_shard_order"] = (
+            f"{cfg.shard_map_source}:0",
+            compute_shard_order(self.g, cfg.shard_map_source,
+                                self._mesh_shards(), part=part))
+
+    def maybe_redeal_shards(self, part: np.ndarray,
+                            n_shards: Optional[int] = None) -> bool:
+        """Refresh the sharded field's shard map along ``part``.
+
+        Applies only under ``field_backend="pallas_sharded"`` with
+        ``shard_map_source="partition"``.  Computes the fresh
+        partition-dealt vertex order and installs it in the precompute
+        dict; the next field evaluation re-packs (and re-uploads) along it
+        — callers invoke this *off the invocation's critical path*
+        (``OnlineTaper.commit_invocation`` does, right after the partition
+        swap).  Skipped (returns ``False``) when fewer than
+        ``redeal_min_moved_frac`` of vertices would change shard, so a
+        converged partitioning never thrashes the packing."""
+        cfg = self.config
+        if (cfg.field_backend != "pallas_sharded"
+                or cfg.shard_map_source != "partition"):
+            return False
+        if n_shards is None:
+            n_shards = self._mesh_shards()
+        from repro.graphs.sharded_packing import partition_shard_order
+
+        new_pos = partition_shard_order(part, n_shards)
+        cur = self._pre.get("_shard_order")
+        if cur is not None:
+            _, cur_pos = cur
+            n0 = min(cur_pos.shape[0], new_pos.shape[0])
+            # the packing's true per-shard span (block-padded); the live
+            # packing knows it exactly, else reconstruct from the default
+            # block_n the field path uses
+            sdev = self._pre.get("_shard_dev")
+            if sdev is not None and sdev["sp"].n_shards == n_shards:
+                span = sdev["sp"].n_local_pad
+            else:
+                nb = max(1, -(-new_pos.shape[0] // 128))
+                span = -(-nb // n_shards) * 128
+            moved = (float(np.mean(
+                new_pos[:n0] // span != cur_pos[:n0] // span)) if n0 else 1.0)
+            if moved < cfg.redeal_min_moved_frac:
+                return False
+        self._redeal_counter += 1
+        self._pre["_shard_order"] = (
+            f"partition:{self._redeal_counter}", new_pos)
+        self._field_memo = None     # memoed field keyed on the old layout
+        log.info("re-dealt shard map along partition (epoch %d)",
+                 self._redeal_counter)
+        return True
+
     # -- workload handling ---------------------------------------------------
     def build_trie(self, workload: Workload) -> TPSTry:
         return TPSTry.from_workload(
@@ -181,6 +268,9 @@ class Taper:
             trie if isinstance(trie, TrieArrays) else trie.compile(self.g.label_names)
         )
         cfg = self.config
+        # resolve the sticky shard map before keying the memo, so the first
+        # sharded evaluation doesn't memoize under a pre-install key
+        self._seed_shard_order(np.asarray(part))
         # §4.2 lazy re-evaluation: if neither the trie probabilities nor the
         # partition changed since the last evaluation, the field is reused
         # verbatim instead of recomputed (workload drift without frequency
@@ -191,7 +281,9 @@ class Taper:
             arrays.cond_p.tobytes(),
             np.asarray(part, dtype=np.int32).tobytes(),
             cfg.depth_cap, cfg.fused_field, cfg.dense_ext_to,
-            cfg.field_backend, self.k, self.g.version,
+            cfg.field_backend, cfg.halo_exchange,
+            self._pre.get("_shard_order", (None,))[0],
+            self.k, self.g.version,
         )
         if self._field_memo is not None and self._field_memo[0] == memo_key:
             return self._field_memo[1]
@@ -205,6 +297,8 @@ class Taper:
             fused=cfg.fused_field,
             dense_ext_to=cfg.dense_ext_to,
             backend=cfg.field_backend,
+            shard_map_source=cfg.shard_map_source,
+            halo_exchange=cfg.halo_exchange,
         )
         self._field_memo = (memo_key, fld)
         return fld

@@ -24,26 +24,43 @@ One jit cache entry exists per (trie topology, graph/partition shapes); trie
 recompiles.
 
 Multi-device (``backend="pallas_sharded"``): the packed edge blocks are
-dealt across the mesh's ``model`` axis (``LabelledGraph.vm_packing_sharded``)
-and the depth loop runs under ``shard_map`` as a **halo-exchange recurrence**:
+dealt across the mesh's ``model`` axis (``LabelledGraph.vm_packing_sharded``,
+along a pluggable topology-aware *shard map* — see
+``repro.graphs.sharded_packing``) and the depth loop runs under
+``shard_map`` as a **halo-exchange recurrence** with two exchange backends:
 
-  1. every shard scatters the ``beta`` rows it owns *and other shards read*
-     (its slice of the precomputed frontier) into an ``(H_pad, N)`` buffer;
-  2. one ``psum`` over ``model`` completes the frontier — each frontier
-     vertex is owned by exactly one shard, so the sum is a union.  This is
-     the only cross-shard traffic per depth: ``H_pad * N`` floats instead
-     of the full ``n * N`` field;
-  3. each shard advances its local destination blocks with the ``vm_step``
-     kernel, gathering sources from ``concat([beta_local, frontier])`` via
-     the packing's precomputed ``src_map`` — remote columns resolve into
-     the frontier segment, owned columns into the local segment;
-  4. per-slot edge masses accumulate shard-locally (over *all* edges, cut
-     and local) and scatter back to raw edge order on the host at the end.
+* ``halo_exchange="sliced"`` (default) — two-tier per-shard-pair slice
+  exchange: hub rows read by many shards travel once in a small psum'd
+  *hot union*, and the cold tail moves as a ragged all-to-all decomposed
+  into ``S - 1`` ring ``ppermute`` rounds, each padded only to that
+  round's largest pair (the packing's precomputed ``send_local`` tables
+  and ``round_cap``).  Per-depth traffic is ``(hot_pad + sum(round_cap))
+  * N`` floats per shard — it scales with what each shard *reads*, not
+  with the global union, so a topology-aware shard map (e.g.
+  ``"partition"``) compresses it directly;
+* ``halo_exchange="psum"`` — the PR-3 union exchange, kept as a fallback
+  for latency-bound meshes where ``S - 1`` collective rounds lose to one
+  ``psum`` (and for layouts whose pairwise halos approach the union
+  anyway): every shard scatters its owned slice of the union frontier
+  into an ``(H_pad, N)`` buffer and one ``psum`` completes it (each
+  frontier row has exactly one owner).
 
-Because destination blocks never cross shards, the kernel's output rows are
-wholly shard-local and ``alpha`` assembles by concatenation.  After graph
+Either way each shard then advances its local destination blocks with the
+``vm_step`` kernel, gathering sources from ``concat([beta_local,
+exchanged])`` via the packing's mode-matched source map (``src_map`` /
+``src_map_sliced``), and per-slot edge masses accumulate shard-locally
+(over *all* edges, cut and local) and scatter back to raw edge order on
+the host at the end.
+
+Because destination blocks never cross shards, the kernel's output rows
+are wholly shard-local and ``alpha`` assembles by concatenation — in
+*position* space; the shard map's inverse permutation restores vertex
+order (a no-op gather under the identity stripe map).  After graph
 mutations, stale device buffers re-upload per *dirty shard* (the packing's
-``shard_epoch`` counters), not wholesale.
+``shard_epoch`` counters), not wholesale.  Each sharded evaluation records
+its measured exchange footprint in ``pre["_halo_stats"]`` (bytes per depth
+step, halo ratio vs the full field, shard-map source, exchange backend)
+for serving metrics and benchmarks.
 """
 from __future__ import annotations
 
@@ -370,12 +387,21 @@ def _pallas_field(
 
 def _build_sharded_fn(mesh, trie: TrieArrays, depth_cap: int,
                       bps: int, block_n: int, block_e: int,
-                      n_local_pad: int, h_pad: int, interpret: bool):
+                      n_local_pad: int, h_pad: int, interpret: bool,
+                      exchange: str = "psum", n_shards: int = 1,
+                      round_cap: Tuple[int, ...] = ()):
     """shard_map'd halo-exchange depth loop (see module docstring §sharded).
 
-    Static per (mesh, trie topology, packing shapes): the trie topology and
-    depth count bake into the loop; probabilities, the partition vector and
-    the packed shard arrays arrive as runtime inputs.
+    Static per (mesh, trie topology, packing shapes, exchange backend): the
+    trie topology and depth count bake into the loop; probabilities, the
+    partition vector and the packed shard arrays arrive as runtime inputs.
+    The ``exchange`` backend decides the per-depth collective: one ``psum``
+    of the union frontier (``fr_a``/``fr_b`` = the union owner maps), or
+    the two-tier sliced exchange — a small ``psum`` of the hot broadcast
+    rows (``fr_a``/``fr_b`` = the hot owner maps) plus ``S - 1`` ring
+    ``ppermute`` rounds of the cold per-shard-pair slices (``send`` = the
+    ``send_local`` tables, round ``r`` padded to the static
+    ``round_cap[r]``; ``src_map`` is then the packing's sliced variant).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -386,14 +412,15 @@ def _build_sharded_fn(mesh, trie: TrieArrays, depth_cap: int,
     labels_n = trie.label.copy()
     N = trie.n_nodes
     max_depth = min(trie.max_depth, depth_cap)
+    sliced = exchange == "sliced"
 
     def body(meta, src_map, dst_local, dst_label, inv_full, src_g, dst_g,
-             vlab, frloc, frown, part, p, lab_vcount, T, Tsum):
+             vlab, fr_a, fr_b, send, part, p, lab_vcount, T, Tsum):
         # sharded inputs arrive with their leading shard axis (size 1)
         (meta, src_map, dst_local, dst_label, inv_full, src_g, dst_g,
-         vlab, frloc, frown) = (
+         vlab, fr_a, fr_b, send) = (
             x[0] for x in (meta, src_map, dst_local, dst_label, inv_full,
-                           src_g, dst_g, vlab, frloc, frown))
+                           src_g, dst_g, vlab, fr_a, fr_b, send))
         local = (part[src_g] == part[dst_g]).astype(jnp.float32)
         inv_local = inv_full * local
         alpha = _prior_columns(depth, labels_n, N, vlab, lab_vcount, p,
@@ -401,9 +428,29 @@ def _build_sharded_fn(mesh, trie: TrieArrays, depth_cap: int,
         beta = alpha
         slot_mass = jnp.zeros(inv_full.shape, dtype=jnp.float32)
         for _ in range(2, max_depth + 1):
-            # halo exchange: each shard contributes its owned frontier rows;
-            # psum completes the union (each row has exactly one owner)
-            fr = jax.lax.psum(beta[frloc] * frown[:, None], "model")
+            if sliced:
+                # two-tier exchange: psum the (small) hot broadcast rows,
+                # then ring-exchange the cold per-pair slices — round r
+                # ships each shard's slice for the reader r hops ahead,
+                # padded to that round's own largest pair
+                hot = jax.lax.psum(beta[fr_a] * fr_b[:, None], "model")
+                me = jax.lax.axis_index("model")
+                parts = [hot]
+                for r in range(1, n_shards):
+                    reader = jax.lax.rem(me + r, n_shards)
+                    rows = jax.lax.dynamic_index_in_dim(
+                        send, reader, axis=0, keepdims=False)
+                    payload = beta[rows[: round_cap[r]]]
+                    parts.append(jax.lax.ppermute(
+                        payload, "model",
+                        perm=[(i, (i + r) % n_shards)
+                              for i in range(n_shards)]))
+                fr = jnp.concatenate(parts, axis=0)
+            else:
+                # union exchange: each shard contributes its owned frontier
+                # rows (fr_a = fr_local_idx, fr_b = fr_owned); psum
+                # completes the union (each row has exactly one owner)
+                fr = jax.lax.psum(beta[fr_a] * fr_b[:, None], "model")
             a_in = jnp.concatenate([beta, fr], axis=0)
             # per-slot mass over ALL edges (cut + local) at this depth
             slot_mass = slot_mass + (
@@ -415,7 +462,7 @@ def _build_sharded_fn(mesh, trie: TrieArrays, depth_cap: int,
             alpha = alpha + beta
         return alpha[None], slot_mass[None]
 
-    sharded = (P("model"),) * 10
+    sharded = (P("model"),) * 11
     fn = shard_map(
         body, mesh=mesh,
         in_specs=sharded + (P(), P(), P(), P(), P()),
@@ -435,8 +482,8 @@ def _sharded_device_arrays(sp, pre: Dict) -> Dict:
     """
     stats = pre.setdefault(
         "_shard_uploads", {"last_shards": 0, "total_shards": 0, "rebuilds": 0})
-    names = ("meta", "src_map", "dst_local", "dst_label", "inv_cnt",
-             "src_global", "dst_global", "vlabels")
+    names = ("meta", "src_map", "src_map_sliced", "dst_local", "dst_label",
+             "inv_cnt", "src_global", "dst_global", "vlabels", "send_local")
     sdev = pre.get("_shard_dev")
     if sdev is not None and sdev["sp"] is not sp:
         sdev = None  # packing was rebuilt from scratch (capacity overflow)
@@ -446,7 +493,12 @@ def _sharded_device_arrays(sp, pre: Dict) -> Dict:
                 "fr_epoch": sp.fr_epoch,
                 "arrays": {nm: jnp.asarray(getattr(sp, nm)) for nm in names},
                 "fr": (jnp.asarray(sp.fr_local_idx),
-                       jnp.asarray(sp.fr_owned))}
+                       jnp.asarray(sp.fr_owned)),
+                "hot": (jnp.asarray(sp.hot_local_idx),
+                        jnp.asarray(sp.hot_owned)),
+                "n_pos": sp.pos_of.shape[0],
+                "pos": (None if sp.identity
+                        else jnp.asarray(sp.pos_of.astype(np.int32)))}
         pre["_shard_dev"] = sdev
         stats["last_shards"] = sp.n_shards
         stats["total_shards"] += sp.n_shards
@@ -460,6 +512,11 @@ def _sharded_device_arrays(sp, pre: Dict) -> Dict:
     if sp.fr_epoch != sdev["fr_epoch"]:
         sdev["fr"] = (jnp.asarray(sp.fr_local_idx), jnp.asarray(sp.fr_owned))
         sdev["fr_epoch"] = sp.fr_epoch
+    if sp.pos_of.shape[0] != sdev["n_pos"]:
+        # vertex growth extended the shard map's identity tail
+        sdev["n_pos"] = sp.pos_of.shape[0]
+        sdev["pos"] = (None if sp.identity
+                       else jnp.asarray(sp.pos_of.astype(np.int32)))
     sdev["epochs"] = sp.shard_epoch.copy()
     stats["last_shards"] = int(dirty.size)
     stats["total_shards"] += int(dirty.size)
@@ -476,15 +533,28 @@ def _pallas_sharded_field(
     dense_ext_to: bool,
     interpret: Optional[bool] = None,
     mesh=None,
+    shard_map_source: str = "stripe",
+    halo_exchange: str = "sliced",
 ):
     """Multi-device extroversion field: ``vm_step`` per shard over the
-    graph's sharded packing, halo-exchanging only the frontier ``beta``
-    columns between depth steps (module docstring §sharded).
+    graph's sharded packing, halo-exchanging only the ``beta`` rows other
+    shards read between depth steps (module docstring §sharded).
 
     The mesh defaults to ``repro.launch.mesh.make_smoke_mesh()`` over every
     visible device and is cached in ``pre["_mesh"]``; callers may seed
     ``pre["_mesh"]`` (e.g. a production mesh's ``model`` axis) instead.
+
+    The shard map is sticky: the first sharded evaluation resolves
+    ``shard_map_source`` (``"stripe"`` | ``"partition"`` — dealt along this
+    call's partition vector — | ``"bfs"``) into a vertex permutation cached
+    in ``pre["_shard_order"]``; subsequent calls reuse it so the packing is
+    never re-dealt mid-invocation.  ``Taper.maybe_redeal_shards`` (called
+    by ``OnlineTaper.commit_invocation``) refreshes it off the critical
+    path.  Callers may seed ``pre["_shard_order"] = (token, pos_of)``
+    directly (tests use random permutations).
     """
+    from repro.graphs.sharded_packing import compute_shard_order
+
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if mesh is None:
@@ -508,7 +578,13 @@ def _pallas_sharded_field(
         lab_vcount = g.label_counts()
     dev = _device_inputs(g, pre, cnt, lab_vcount)
 
-    sp = g.vm_packing_sharded(S, cnt=cnt)
+    order_entry = pre.get("_shard_order")
+    if order_entry is None and shard_map_source != "stripe":
+        order_entry = (f"{shard_map_source}:0",
+                       compute_shard_order(g, shard_map_source, S, part=part))
+        pre["_shard_order"] = order_entry
+    token, order = order_entry if order_entry is not None else ("stripe", None)
+    sp = g.vm_packing_sharded(S, cnt=cnt, order=order, order_token=token)
     sdev = _sharded_device_arrays(sp, pre)
     arr = sdev["arrays"]
     frloc, frown = sdev["fr"]
@@ -522,30 +598,56 @@ def _pallas_sharded_field(
     else:
         _, T, Tsum = t_hit
 
+    round_cap = tuple(int(c) for c in sp.round_cap)
     key = ("sharded", trie.topology_signature(), int(depth_cap), S,
            sp.blocks_per_shard, sp.block_n, sp.block_e, sp.eb_cap,
-           sp.n_local_pad, sp.h_pad, bool(interpret), id(mesh))
+           sp.n_local_pad, sp.h_pad, sp.hot_pad, round_cap, halo_exchange,
+           bool(interpret), id(mesh))
     fn = _FIELD_CACHE.get(key)
     if fn is None:
         fn = _build_sharded_fn(
             mesh, trie, depth_cap, sp.blocks_per_shard, sp.block_n,
-            sp.block_e, sp.n_local_pad, sp.h_pad, interpret)
+            sp.block_e, sp.n_local_pad, sp.h_pad, interpret,
+            exchange=halo_exchange, n_shards=S, round_cap=round_cap)
         while len(_FIELD_CACHE) >= 64:
             _FIELD_CACHE.pop(next(iter(_FIELD_CACHE)))
         _FIELD_CACHE[key] = fn
 
+    if halo_exchange == "sliced":
+        src_map_in = arr["src_map_sliced"]
+        fr_a, fr_b = sdev["hot"]
+    else:
+        src_map_in, fr_a, fr_b = arr["src_map"], frloc, frown
     part_dev = jnp.asarray(part.astype(np.int32))
     alpha_sh, slot_mass = fn(
-        arr["meta"], arr["src_map"], arr["dst_local"], arr["dst_label"],
+        arr["meta"], src_map_in, arr["dst_local"], arr["dst_label"],
         arr["inv_cnt"], arr["src_global"], arr["dst_global"], arr["vlabels"],
-        frloc, frown,
+        fr_a, fr_b, arr["send_local"],
         part_dev, jnp.asarray(trie.p),
         dev["lab_vcount"], T, Tsum)
 
-    alpha = jnp.reshape(alpha_sh, (S * sp.n_local_pad, N))[:n]
+    alpha_pos = jnp.reshape(alpha_sh, (S * sp.n_local_pad, N))
+    # kernel rows are positions; the shard map's inverse restores vertex
+    # order (no-op slice under the identity stripe map)
+    alpha = (alpha_pos[:n] if sdev["pos"] is None
+             else alpha_pos[sdev["pos"]])
     mass = jnp.asarray(sp.scatter_slot_values(np.asarray(slot_mass), m))
     src, dst = dev["src"], dev["dst"]
     local = (part_dev[src] == part_dev[dst]).astype(jnp.float32)
+
+    full = sp.full_field_bytes_per_depth(n, N)
+    halo = sp.halo_bytes_per_depth(N, exchange=halo_exchange)
+    pre["_halo_stats"] = {
+        "halo_bytes_per_depth": halo,
+        "full_field_bytes_per_depth": full,
+        "halo_ratio": halo / max(full, 1),
+        "shard_map_source": token.split(":")[0],
+        "halo_exchange": halo_exchange,
+        "n_shards": S,
+        "n_frontier": sp.n_frontier,
+        "hot_rows": sp.hot_pad,
+        "sliced_rows": sp.hot_pad + int(sp.round_cap[1:].sum()),
+    }
 
     max_depth = min(trie.max_depth, depth_cap)
     counted = [
@@ -566,6 +668,8 @@ def extroversion_field(
     fused: bool = True,
     dense_ext_to: bool = True,
     backend: str = "jnp",
+    shard_map_source: str = "stripe",
+    halo_exchange: str = "sliced",
 ) -> ExtroversionResult:
     """Compute the extroversion field of ``part`` under the workload trie.
 
@@ -585,9 +689,14 @@ def extroversion_field(
     transcription), ``"pallas"`` (the ``vm_step`` TPU kernel over the
     graph's cached edge packing; interpret mode auto-disables on TPU) or
     ``"pallas_sharded"`` (the same kernel per shard over every visible
-    device, halo-exchanging only cross-shard frontier columns between depth
-    steps — see the module docstring; seed ``_precomputed["_mesh"]`` to pin
-    a specific mesh).
+    device, halo-exchanging only the cross-shard ``beta`` rows between
+    depth steps — see the module docstring; seed ``_precomputed["_mesh"]``
+    to pin a specific mesh).  ``shard_map_source`` / ``halo_exchange``
+    apply to the sharded backend only: how vertices are dealt to shards
+    (``"stripe"`` | ``"partition"`` | ``"bfs"``) and whether the exchange
+    moves per-shard-pair slices (``"sliced"``: a psum'd hot union plus
+    ``S - 1`` ring ``ppermute`` rounds, padded per round) or the psum'd
+    union frontier (``"psum"``).
     """
     depth_cap = depth_cap or trie.max_depth
     pre = _precomputed if _precomputed is not None else {}
@@ -595,7 +704,9 @@ def extroversion_field(
         out = _pallas_field(g, trie, part, k, depth_cap, pre, dense_ext_to)
     elif backend == "pallas_sharded":
         out = _pallas_sharded_field(g, trie, part, k, depth_cap, pre,
-                                    dense_ext_to)
+                                    dense_ext_to,
+                                    shard_map_source=shard_map_source,
+                                    halo_exchange=halo_exchange)
     elif backend == "jnp":
         key = (trie.topology_signature(), k, depth_cap, g.n, g.m, fused,
                dense_ext_to)

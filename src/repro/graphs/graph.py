@@ -384,18 +384,23 @@ class LabelledGraph:
 
     def vm_packing_sharded(self, n_shards: int,
                            cnt: Optional[np.ndarray] = None,
-                           block_n: int = 128, block_e: int = 256):
+                           block_n: int = 128, block_e: int = 256,
+                           order: Optional[np.ndarray] = None,
+                           order_token: str = "stripe"):
         """Cached shard-aware edge packing for the multi-device field.
 
         Returns a :class:`repro.graphs.sharded_packing.ShardedVMPacking`:
-        the ``vm_packing`` destination blocks dealt contiguously across
-        ``n_shards`` shards, with per-shard local/halo source index maps and
-        the frontier-exchange tables (see that module's docstring).  Cached
-        per ``(n_shards, block_n, block_e)`` and version-keyed like
-        :meth:`vm_packing`; :meth:`apply_mutations` patches cached entries
-        per dirty shard (bumping their ``shard_epoch`` counters so device
-        caches re-upload only changed shard slices), evicting only when the
-        mutation outgrows the packing's capacity slack.
+        the ``vm_packing`` destination blocks dealt across ``n_shards``
+        shards along the ``order`` shard map (a vertex -> position
+        permutation; ``None`` = contiguous id stripes), with per-shard
+        local/halo source index maps and both halo-exchange table sets (see
+        that module's docstring).  Cached per ``(n_shards, block_n,
+        block_e)`` and version-keyed like :meth:`vm_packing`; a call with a
+        different ``order_token`` re-deals (rebuilds) the cached entry.
+        :meth:`apply_mutations` patches cached entries per dirty shard
+        (bumping their ``shard_epoch`` counters so device caches re-upload
+        only changed shard slices), evicting only when the mutation
+        outgrows the packing's capacity slack.
         """
         if cnt is None:
             cnt = self.cached_neighbor_label_counts()
@@ -403,13 +408,15 @@ class LabelledGraph:
         hit = self._vm_pack_cache.get(key)
         if hit is not None:
             cached_cnt, entry = hit
-            if entry.version == self.version and (
-                    cached_cnt is cnt or np.array_equal(cnt, cached_cnt)):
+            if (entry.version == self.version
+                    and entry.order_token == order_token
+                    and (cached_cnt is cnt or np.array_equal(cnt, cached_cnt))):
                 return entry
         from repro.graphs.sharded_packing import build_sharded_vm_packing
 
         entry = build_sharded_vm_packing(
-            self, n_shards, cnt, block_n=block_n, block_e=block_e)
+            self, n_shards, cnt, block_n=block_n, block_e=block_e,
+            order=order, order_token=order_token)
         self._vm_pack_cache[key] = (np.asarray(cnt), entry)
         return entry
 

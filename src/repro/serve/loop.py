@@ -96,7 +96,13 @@ class ServingLoop:
         self.g = g
         self.k = k
         self.executor = QueryExecutor(g)
-        self.requests = RequestQueue(self.cfg.max_queue_depth)
+        # admission classes: the queue grades backpressure by per-query
+        # sketch frequency (hot queries have warm plans/DP rows); the
+        # frequency snapshot refreshes once per served micro-batch
+        self._adm_freqs: Dict[str, float] = {}
+        self.requests = RequestQueue(
+            self.cfg.max_queue_depth,
+            admission_weight=lambda q: self._adm_freqs.get(q.qhash, 0.0))
         self.ingest = IngestQueue(self.cfg.max_ingest_depth)
         self.metrics = ServeMetrics(self.cfg.metrics_window)
         self._pending: Optional[PendingInvocation] = None
@@ -130,8 +136,10 @@ class ServingLoop:
             queue_depth=self.requests.depth(),
             ingest_depth=self.ingest.depth(),
             rejected_requests=self.requests.rejected,
+            rejected_cold_requests=self.requests.rejected_cold,
             rejected_mutations=self.ingest.rejected,
             failed_mutations=self.ingest.failed,
+            field_stats=self.ot.taper._pre.get("_halo_stats"),
         )
 
     @property
@@ -221,6 +229,9 @@ class ServingLoop:
         self.metrics.record_batch(
             [t.latency_s for t in batch], [t.ipt for t in batch], overlapped)
         self.ot.observe(queries)
+        # one snapshot per batch (O(#distinct queries)); admission reads it
+        # lock-free via atomic rebind
+        self._adm_freqs = self.ot.sketch.frequencies(self.ot.policy.min_freq)
         self._requests_since_invocation += len(batch)
         mean_ipt = float(np.mean([t.ipt for t in batch]))
         self._ipt_ewma = (mean_ipt if self._ipt_ewma is None
@@ -279,12 +290,20 @@ class ServingLoop:
             return
         self._inflight.join()
         wall = time.perf_counter() - self._invocation_t0
+        committed = False
         if self._pending is not None and self._pending.report is not None:
             self.ot.commit_invocation(self._pending)
             self.metrics.record_invocation(wall, overlapped=True)
+            committed = True
         self._pending = None
         self._inflight = None
         self._requests_since_invocation = 0
+        if committed:
+            # the commit may have re-dealt the shard map along the enhanced
+            # partition (shard_map_source="partition"); re-pack and upload
+            # now, on the worker between batches, so the next overlapped
+            # invocation starts from a warm re-dealt layout
+            self._warm_devices()
 
     def _finish_inflight(self) -> None:
         if self._inflight is not None:
@@ -332,6 +351,8 @@ class ServingLoop:
         mesh = pre.get("_mesh")
         n_shards = (int(mesh.shape["model"]) if mesh is not None
                     else len(jax.devices()))
+        token, order = pre.get("_shard_order") or ("stripe", None)
         sp = self.g.vm_packing_sharded(
-            n_shards, cnt=self.g.cached_neighbor_label_counts())
+            n_shards, cnt=self.g.cached_neighbor_label_counts(),
+            order=order, order_token=token)
         _sharded_device_arrays(sp, pre)

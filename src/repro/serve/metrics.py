@@ -89,17 +89,30 @@ class ServeMetrics:
                 self.invocation_stall_s += float(wall_s)
 
     def snapshot(self, queue_depth: int = 0, ingest_depth: int = 0,
-                 rejected_requests: int = 0, rejected_mutations: int = 0,
-                 failed_mutations: int = 0) -> Dict[str, float]:
-        """Flat dict of the current SLO picture (plain python scalars)."""
+                 rejected_requests: int = 0, rejected_cold_requests: int = 0,
+                 rejected_mutations: int = 0, failed_mutations: int = 0,
+                 field_stats: Dict = None) -> Dict[str, float]:
+        """Flat dict of the current SLO picture (plain python scalars).
+
+        ``field_stats`` is the sharded field's last measured exchange
+        footprint (``pre["_halo_stats"]``): the halo bytes moved per depth
+        step, their ratio to a full-field exchange, and which shard-map /
+        exchange backend produced them — so dashboards see the serving
+        loop's invocation bandwidth next to its latency percentiles."""
+        fs = field_stats or {}
         with self._lock:
             c = max(self.completed, 1)
             return {
                 "completed": self.completed,
                 "batches": self.batches,
                 "rejected_requests": rejected_requests,
+                "rejected_cold_requests": rejected_cold_requests,
                 "rejected_mutations": rejected_mutations,
                 "failed_mutations": failed_mutations,
+                "halo_bytes_per_depth": fs.get("halo_bytes_per_depth", 0),
+                "halo_ratio": fs.get("halo_ratio", 0.0),
+                "shard_map_source": fs.get("shard_map_source", ""),
+                "halo_exchange": fs.get("halo_exchange", ""),
                 "queue_depth": queue_depth,
                 "ingest_depth": ingest_depth,
                 "total_ipt": self.total_ipt,

@@ -9,6 +9,18 @@ drain, derived from an EWMA of recent per-request service time.  Rejecting
 at admission instead of queueing unboundedly is what turns an overloaded
 serving loop into backpressure the client can act on.
 
+**Admission classes.**  An optional ``admission_weight`` hook (the serving
+loop wires it to the ``FrequencySketch``'s per-query frequency) grades
+backpressure by query heat — hot queries are cheap to serve (their
+enumeration plan and traversal-count DP rows are warm), so under pressure
+they are admitted ahead of cold ones: the top ``hot_reserve_frac`` of the
+queue only admits queries at least as hot as the EWMA of recently admitted
+weights (colder ones get a ``"cold_backpressure"`` rejection), and every
+rejection's retry hint is scaled by relative heat — hot queries are told
+to come back sooner, cold ones later, so the retry traffic itself arrives
+pre-sorted by admission priority.  Without the hook behaviour is exactly
+the unweighted PR-4 queue.
+
 The serving loop drains requests in *micro-batches*
 (:meth:`RequestQueue.take_batch`): up to ``max_batch`` requests leave
 together so the executor can share per-query enumeration work across the
@@ -18,7 +30,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple, Union
+from typing import Callable, List, Optional, Tuple, Union
 
 from repro.core.rpq import RPQ
 
@@ -64,10 +76,17 @@ class ServeTicket:
 
 class RequestQueue:
     """Thread-safe bounded FIFO of :class:`ServeTicket` with micro-batch
-    draining and a service-rate EWMA for retry hints."""
+    draining, a service-rate EWMA for retry hints, and optional
+    frequency-weighted admission classes (module docstring)."""
+
+    #: retry-hint scale clamp: a hint is never stretched/compressed by more
+    #: than this factor relative to the unweighted backlog-drain estimate
+    HINT_SCALE_MAX = 4.0
 
     def __init__(self, max_depth: int = 256, ewma_alpha: float = 0.2,
-                 initial_service_s: float = 1e-3):
+                 initial_service_s: float = 1e-3,
+                 admission_weight: Optional[Callable[[RPQ], float]] = None,
+                 hot_reserve_frac: float = 0.25):
         if max_depth < 1:
             raise ValueError("max_depth must be >= 1")
         self.max_depth = int(max_depth)
@@ -77,19 +96,48 @@ class RequestQueue:
         self._ewma_alpha = float(ewma_alpha)
         # seeded optimistic; the first completed batches correct it
         self._service_s = float(initial_service_s)
+        self.admission_weight = admission_weight
+        self.hot_reserve_frac = float(hot_reserve_frac)
+        # EWMA of admitted weights = the hot/cold watershed; starts at 0 so
+        # an unwarmed sketch (every weight 0) treats all queries as hot
+        self._weight_ewma = 0.0
         self.submitted = 0
         self.rejected = 0
+        self.rejected_cold = 0
+
+    def _hint_scale(self, weight: Optional[float]) -> float:
+        """Retry-hint multiplier from relative heat: hot queries (above the
+        admitted-weight EWMA) retry sooner, cold ones later."""
+        if weight is None or self._weight_ewma <= 0.0:
+            return 1.0
+        ratio = self._weight_ewma / max(weight, 1e-9)
+        return min(max(ratio, 1.0 / self.HINT_SCALE_MAX), self.HINT_SCALE_MAX)
 
     # -- admission -----------------------------------------------------------
     def submit(self, query: RPQ) -> Union[ServeTicket, Rejection]:
-        """Admit one request or reject with a backlog-drain retry hint."""
+        """Admit one request or reject with a backlog-drain retry hint
+        (weighted by the query's sketch frequency when the queue has an
+        ``admission_weight`` hook)."""
+        w = (self.admission_weight(query)
+             if self.admission_weight is not None else None)
         with self._lock:
             depth = len(self._items)
+            hint = max(depth, 1) * self._service_s * self._hint_scale(w)
             if depth >= self.max_depth:
                 self.rejected += 1
-                return Rejection(
-                    retry_after_s=max(depth, 1) * self._service_s,
-                    queue_depth=depth)
+                return Rejection(retry_after_s=hint, queue_depth=depth)
+            if (w is not None
+                    and depth >= self.max_depth * (1 - self.hot_reserve_frac)
+                    and w < self._weight_ewma):
+                # the reserve zone only admits hot queries: their plans/DP
+                # rows are warm, so they clear backlog fastest
+                self.rejected += 1
+                self.rejected_cold += 1
+                return Rejection(retry_after_s=hint, queue_depth=depth,
+                                 reason="cold_backpressure")
+            if w is not None:
+                a = self._ewma_alpha
+                self._weight_ewma = (1 - a) * self._weight_ewma + a * w
             ticket = ServeTicket(query=query, submitted_s=time.perf_counter())
             self._items.append(ticket)
             self.submitted += 1

@@ -1,0 +1,188 @@
+"""Hypothesis property suite for topology-aware shard maps (PR 5).
+
+Three families of randomized invariants:
+
+* **random shard maps** — the sharded extroversion field matches the jnp
+  oracle bit-for-tolerance under *arbitrary* vertex permutations, on both
+  exchange backends (the permutation threads through packing, frontier,
+  slot tables and the inverse gather);
+* **mutations against a permuted packing** — random ``MutationBatch``
+  sequences patch a permuted packing to exactly the state a scratch
+  rebuild (same shard map) produces, and both source maps keep decoding to
+  the true global source of every slot;
+* **k != S partition folding** — ``partition_shard_order`` stays a
+  permutation that keeps every partition's positions contiguous for any
+  (k, n_shards) combination.
+
+The deterministic seeded twins live in tests/test_sharded_field.py.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.rpq import parse_rpq
+from repro.core.tpstry import TPSTry
+from repro.core.visitor import extroversion_field
+from repro.graphs.generators import power_law_labelled
+from repro.graphs.graph import MutationBatch
+from repro.graphs.sharded_packing import (
+    build_sharded_vm_packing,
+    partition_shard_order,
+)
+from test_dynamic_graph import _random_batch  # sibling (pytest sys.path)
+
+SET = settings(
+    max_examples=10,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+FIELDS = ("alpha", "pr", "edge_mass", "extro_mass", "extroversion", "ext_to")
+
+
+def _decode_checks(sp, g):
+    """Both source maps of every shard decode to the true global source."""
+    raw = sp.slot_raw.reshape(-1)
+    real = raw >= 0
+    assert int(real.sum()) == g.m
+    assert np.array_equal(np.sort(raw[real]), np.arange(g.m))
+    hot2pos = np.zeros(max(sp.n_hot, 1), np.int64)
+    live_hot = sp.fr_hot_pos[: sp.n_frontier]
+    hot2pos[live_hot[live_hot >= 0]] = \
+        sp.frontier[: sp.n_frontier][live_hot >= 0]
+    rb = sp.round_base
+    for s in range(sp.n_shards):
+        r = sp.slot_raw[s] >= 0
+        truth = sp.src_global[s][r]
+        # destinations are wholly shard-owned in position space
+        assert (sp.pos_of[sp.dst_global[s][r]] // sp.n_local_pad == s).all()
+        # psum map: [local | union frontier]
+        m_ = sp.src_map[s][r]
+        own = m_ < sp.n_local_pad
+        fidx = np.maximum(m_ - sp.n_local_pad, 0)
+        dec = np.where(own, m_ + s * sp.n_local_pad, sp.frontier[fidx])
+        assert np.array_equal(sp.vtx_at[dec], truth)
+        # sliced map: [local | hot union | ring round slices]
+        msl = sp.src_map_sliced[s][r]
+        assert np.array_equal(own, msl < sp.n_local_pad)
+        rel = np.maximum(msl - sp.n_local_pad, 0)
+        is_hot = rel < sp.hot_pad
+        cold = np.maximum(rel - sp.hot_pad, 0)
+        rnd = np.minimum(np.searchsorted(rb[1:], cold, side="right"),
+                         sp.n_shards - 1)
+        slot = cold - rb[rnd]
+        owner = (s - rnd) % sp.n_shards
+        dec_cold = (sp.send_local[owner, s, np.minimum(slot, sp.pair_cap - 1)]
+                    + owner * sp.n_local_pad)
+        dec_hot = hot2pos[np.minimum(rel, max(sp.n_hot - 1, 0))]
+        dec_sl = np.where(own, dec, np.where(is_hot, dec_hot, dec_cold))
+        assert np.array_equal(sp.vtx_at[dec_sl], truth)
+
+
+@st.composite
+def graph_and_map(draw):
+    n = draw(st.integers(80, 300))
+    seed = draw(st.integers(0, 2**16))
+    n_shards = draw(st.sampled_from([1, 2, 3, 5, 8]))
+    kind = draw(st.sampled_from(["identity", "random", "partition"]))
+    return n, seed, n_shards, kind
+
+
+def _order_for(kind, g, n_shards, rng):
+    if kind == "identity":
+        return None
+    if kind == "random":
+        return rng.permutation(g.n).astype(np.int64)
+    part = rng.integers(0, rng.integers(2, 13), g.n)
+    return partition_shard_order(part, n_shards)
+
+
+@given(graph_and_map())
+@SET
+def test_sharded_field_parity_random_shard_maps(scenario):
+    n, seed, n_shards, kind = scenario
+    g = power_law_labelled(n, n_labels=5, avg_degree=5.0, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    arrays = TPSTry.from_workload(
+        [(parse_rpq("L0.L1.(L2|L3).L1"), 0.6),
+         (parse_rpq("L1.L2.L0"), 0.4)]).compile(g.label_names)
+    k = int(rng.integers(2, 7))
+    part = rng.integers(0, k, g.n).astype(np.int32)
+    ref = extroversion_field(g, arrays, part, k, backend="jnp")
+    order = _order_for(kind, g, n_shards, rng)
+    for exchange in ("sliced", "psum"):
+        pre = ({} if order is None
+               else {"_shard_order": (f"{kind}:0", order)})
+        sh = extroversion_field(g, arrays, part, k, _precomputed=pre,
+                                backend="pallas_sharded",
+                                halo_exchange=exchange)
+        for f in FIELDS:
+            np.testing.assert_allclose(
+                getattr(ref, f), getattr(sh, f), atol=2e-5, rtol=1e-4,
+                err_msg=f"{kind}/{exchange}:{f}")
+
+
+@st.composite
+def mutation_scenario(draw):
+    n = draw(st.integers(60, 220))
+    seed = draw(st.integers(0, 2**16))
+    n_shards = draw(st.sampled_from([2, 4, 8]))
+    kind = draw(st.sampled_from(["random", "partition"]))
+    specs = draw(st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 10), st.integers(0, 10),
+                  st.booleans(), st.integers(0, 2)),
+        min_size=1, max_size=3))
+    return n, seed, n_shards, kind, specs
+
+
+@given(mutation_scenario())
+@SET
+def test_random_mutations_against_permuted_packing(scenario):
+    n, seed, n_shards, kind, specs = scenario
+    g = power_law_labelled(n, n_labels=4, avg_degree=5.0, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    order = _order_for(kind, g, n_shards, rng)
+    token = f"{kind}:0"
+    sp = g.vm_packing_sharded(n_shards, block_n=32, block_e=64,
+                              order=order, order_token=token)
+    for nv, na, nr, drop_vertex, nrl in specs:
+        rem_v = [int(rng.integers(0, g.n))] if drop_vertex else []
+        g.apply_mutations(_random_batch(g, rng, nv, na, nr, rem_v, nrl=nrl))
+        g.validate()
+        sp2 = g.vm_packing_sharded(n_shards, block_n=32, block_e=64,
+                                   order=order, order_token=token)
+        assert sp2.version == g.version
+        _decode_checks(sp2, g)
+        # patched (when capacity held) or rebuilt — either way it must
+        # agree with a scratch rebuild along the same (extended) shard map
+        scratch = build_sharded_vm_packing(
+            g, n_shards, g.cached_neighbor_label_counts(),
+            block_n=32, block_e=64, order=sp2.pos_of, order_token=token)
+        raw_a, raw_b = sp2.slot_raw.reshape(-1), scratch.slot_raw.reshape(-1)
+        ok_a, ok_b = raw_a >= 0, raw_b >= 0
+        oa, ob = np.argsort(raw_a[ok_a]), np.argsort(raw_b[ok_b])
+        for nm in ("src_global", "dst_global", "dst_label", "inv_cnt"):
+            va = getattr(sp2, nm).reshape(-1)[ok_a][oa]
+            vb = getattr(scratch, nm).reshape(-1)[ok_b][ob]
+            assert np.array_equal(va, vb), nm
+        assert np.array_equal(sp2.vlabels, scratch.vlabels)
+        # the patched frontier may keep stale (harmless) entries but must
+        # cover every halo position the scratch packing needs
+        assert set(scratch.frontier[: scratch.n_frontier]) <= set(
+            sp2.frontier[: sp2.n_frontier])
+
+
+@given(st.integers(1, 16), st.integers(1, 12), st.integers(0, 2**16),
+       st.integers(50, 400))
+@SET
+def test_partition_fold_properties(k, n_shards, seed, n):
+    rng = np.random.default_rng(seed)
+    part = rng.integers(0, k, n)
+    pos = partition_shard_order(part, n_shards)
+    assert np.array_equal(np.sort(pos), np.arange(n))
+    for p in range(k):
+        ps = np.sort(pos[part == p])
+        if ps.size:
+            assert ps[-1] - ps[0] == ps.size - 1

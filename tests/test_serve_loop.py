@@ -49,6 +49,68 @@ def test_request_queue_backpressure_rejects_with_retry_hint():
     assert q.submit(MQ1).accepted
 
 
+def test_admission_classes_reserve_admits_hot_ahead_of_cold():
+    # hot MQ1 dominates the observed stream, cold MQ3 trickles
+    freqs = {MQ1.qhash: 0.9, MQ3.qhash: 0.02}
+    q = RequestQueue(max_depth=8, hot_reserve_frac=0.5,
+                     admission_weight=lambda rpq: freqs[rpq.qhash])
+    # warm the admitted-weight EWMA below the reserve zone
+    for _ in range(4):
+        assert q.submit(MQ1).accepted
+    # reserve zone (depth >= 4): cold queries are refused, hot admitted
+    cold = q.submit(MQ3)
+    assert not cold.accepted
+    assert cold.reason == "cold_backpressure"
+    assert q.rejected_cold == 1
+    hot = q.submit(MQ1)
+    assert hot.accepted
+    # a genuinely full queue rejects both, but the hint is graded by heat:
+    # hot queries are told to retry sooner than cold ones
+    for _ in range(3):
+        q.submit(MQ1)
+    hot_rej = q.submit(MQ1)
+    cold_rej = q.submit(MQ3)
+    assert not hot_rej.accepted and not cold_rej.accepted
+    assert hot_rej.reason == "queue_full"
+    assert hot_rej.retry_after_s < cold_rej.retry_after_s
+
+
+def test_admission_classes_inactive_without_weight_hook_or_signal():
+    # no hook: PR-4 behaviour byte for byte
+    q = RequestQueue(max_depth=2)
+    assert q.submit(MQ1).accepted and q.submit(MQ3).accepted
+    assert q.submit(MQ1).reason == "queue_full"
+    # hook present but sketch unwarmed (all weights 0): everything is hot,
+    # so the reserve never rejects and hints stay unscaled
+    q2 = RequestQueue(max_depth=2, admission_weight=lambda rpq: 0.0)
+    assert q2.submit(MQ1).accepted and q2.submit(MQ3).accepted
+    rej = q2.submit(MQ3)
+    assert rej.reason == "queue_full"
+    assert q2.rejected_cold == 0
+
+
+def test_serving_loop_grades_backpressure_by_sketch_frequency():
+    g = musicbrainz_like(400, seed=3)
+    loop = ServingLoop(
+        g, 4, config=ServeLoopConfig(micro_batch=8, max_queue_depth=8))
+    # serve a hot-heavy stream inline to warm the sketch snapshot
+    for _ in range(6):
+        for q in [MQ1] * 7 + [MQ3]:
+            loop.submit(q)
+        loop.pump()
+    assert loop._adm_freqs[MQ1.qhash] > loop._adm_freqs.get(MQ3.qhash, 0.0)
+    # fill into the reserve zone with hot traffic; cold is now refused
+    # ahead of hot under pressure
+    while loop.requests.depth() < loop.cfg.max_queue_depth - 1:
+        assert loop.submit(MQ1).accepted
+    cold = loop.submit(MQ3)
+    hot = loop.submit(MQ1)
+    assert not cold.accepted and cold.reason == "cold_backpressure"
+    assert hot.accepted
+    stats = loop.stop()
+    assert stats["rejected_cold_requests"] >= 1
+
+
 def test_request_queue_micro_batch_is_fifo():
     q = RequestQueue(max_depth=16)
     t1, t2, t3 = q.submit(MQ1), q.submit(MQ3), q.submit(MQ1)

@@ -16,8 +16,12 @@ from repro.core.tpstry import TPSTry
 from repro.core.visitor import extroversion_field
 from repro.graphs.generators import musicbrainz_like, power_law_labelled
 from repro.graphs.graph import LabelledGraph, MutationBatch
-from repro.graphs.partition import hash_partition
-from repro.graphs.sharded_packing import build_sharded_vm_packing
+from repro.graphs.partition import hash_partition, metis_like_partition
+from repro.graphs.sharded_packing import (
+    bfs_shard_order,
+    build_sharded_vm_packing,
+    partition_shard_order,
+)
 
 MQ1 = parse_rpq("Area.Artist.(Artist|Label).Area")
 MQ3 = parse_rpq("Artist.Credit.Track.Medium")
@@ -157,6 +161,130 @@ def test_sharded_field_parity_vs_pallas_single_device():
     ref = extroversion_field(g, arrays, part, 8, backend="pallas")
     sh = extroversion_field(g, arrays, part, 8, backend="pallas_sharded")
     _assert_field_parity(ref, sh)
+
+
+# ---------------------------------------------------------------------------
+# topology-aware shard maps + exchange backends (PR 5)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("source", ["stripe", "partition", "bfs"])
+@pytest.mark.parametrize("exchange", ["psum", "sliced"])
+def test_sharded_field_parity_shard_maps_and_exchanges(source, exchange):
+    g = musicbrainz_like(900, seed=41)
+    arrays = _trie(g)
+    part = metis_like_partition(g, 4, seed=0)
+    ref = extroversion_field(g, arrays, part, 4, backend="jnp")
+    pre = {}
+    sh = extroversion_field(g, arrays, part, 4, _precomputed=pre,
+                            backend="pallas_sharded",
+                            shard_map_source=source, halo_exchange=exchange)
+    _assert_field_parity(ref, sh)
+    hs = pre["_halo_stats"]
+    assert hs["shard_map_source"] == source
+    assert hs["halo_exchange"] == exchange
+    assert hs["halo_bytes_per_depth"] < hs["full_field_bytes_per_depth"]
+
+
+def test_partition_shard_order_k_equals_s():
+    part = np.repeat(np.arange(4), 25)
+    pos = partition_shard_order(part, 4)
+    # bijection, and co-partitioned vertices occupy contiguous positions
+    assert np.array_equal(np.sort(pos), np.arange(100))
+    for p in range(4):
+        ps = np.sort(pos[part == p])
+        assert ps[-1] - ps[0] == ps.size - 1
+
+
+@pytest.mark.parametrize("k,s", [(5, 3), (12, 8), (3, 8), (2, 1)])
+def test_partition_shard_order_folds_k_to_s(k, s):
+    rng = np.random.default_rng(k * 31 + s)
+    part = rng.integers(0, k, 400)
+    pos = partition_shard_order(part, s)
+    assert np.array_equal(np.sort(pos), np.arange(400))
+    # partitions stay whole: each partition's positions are contiguous
+    for p in range(k):
+        ps = np.sort(pos[part == p])
+        if ps.size:
+            assert ps[-1] - ps[0] == ps.size - 1
+    # greedy largest-first folding keeps the position groups balanced:
+    # no fold group exceeds the LPT bound of ~(4/3) * ideal + max part
+    span = -(-400 // s)
+    sizes = np.bincount(part, minlength=k)
+    group_of = pos // span
+    loads = np.bincount(np.minimum(group_of, s - 1), minlength=s)
+    assert loads.max() <= 400 / s + sizes.max()
+
+
+def test_bfs_shard_order_is_permutation_and_groups_neighbours():
+    g = musicbrainz_like(800, seed=7)
+    pos = bfs_shard_order(g)
+    assert np.array_equal(np.sort(pos), np.arange(g.n))
+    # locality: the mean positional distance across edges must beat a
+    # random permutation's (~n/3) by a wide margin
+    rng = np.random.default_rng(0)
+    rand = rng.permutation(g.n)
+    d_bfs = np.abs(pos[g.src] - pos[g.dst]).mean()
+    d_rand = np.abs(rand[g.src].astype(np.int64) - rand[g.dst]).mean()
+    assert d_bfs < 0.6 * d_rand
+
+
+def test_partition_map_sliced_exchange_compresses_halo():
+    """The PR-5 headline at test scale: partition-dealt shards + the
+    two-tier sliced exchange move >= 2x fewer bytes per depth step than
+    the PR-3 stripe + psum'd-union baseline (packing-level, exact)."""
+    g = musicbrainz_like(2000, seed=13)
+    n_trie = 16
+    sp_stripe = g.vm_packing_sharded(8)
+    order = partition_shard_order(metis_like_partition(g, 8, seed=0), 8)
+    sp_part = g.vm_packing_sharded(8, order=order, order_token="partition:0")
+    base = sp_stripe.halo_bytes_per_depth(n_trie, exchange="psum")
+    sliced = sp_part.halo_bytes_per_depth(n_trie, exchange="sliced")
+    assert sliced * 2 <= base
+    # the two-tier scan never loses to the union on the same shard map
+    assert sp_part.halo_bytes_per_depth(n_trie, exchange="sliced") <= \
+        sp_part.halo_bytes_per_depth(n_trie, exchange="psum")
+
+
+def test_online_taper_redeals_shards_on_commit():
+    g = musicbrainz_like(1000, seed=33)
+    from repro.core.online import OnlinePolicy, OnlineTaper
+
+    ot = OnlineTaper(
+        g, 4,
+        config=TaperConfig(max_iterations=2,
+                           field_backend="pallas_sharded",
+                           shard_map_source="partition"),
+        policy=OnlinePolicy(cadence=2, min_interval=0))
+    ot.observe([MQ1] * 40)
+    pre = ot.taper._pre
+    assert ot.invoke(reason="manual") is not None
+    token, order = pre["_shard_order"]
+    assert token.startswith("partition:")
+    assert np.array_equal(np.sort(order), np.arange(g.n))
+    # the installed layout is what the next field evaluation packs by
+    fld_pre_stats = pre["_halo_stats"]
+    assert fld_pre_stats["shard_map_source"] == "partition"
+    # an unchanged partition skips the re-deal (no repacking churn)
+    assert not ot.taper.maybe_redeal_shards(ot.part)
+    # a genuinely regrouped partition re-deals under a fresh token (pinned
+    # to a 4-way layout so the check is meaningful on a 1-device tier-1 run)
+    regrouped = np.random.default_rng(0).integers(0, 4, g.n).astype(np.int32)
+    assert ot.taper.maybe_redeal_shards(regrouped, n_shards=4)
+    assert pre["_shard_order"][0] != token
+
+
+def test_taper_config_psum_fallback_matches_sliced():
+    g = musicbrainz_like(700, seed=44)
+    w = [(MQ1, 0.5), (MQ3, 0.5)]
+    part0 = hash_partition(g.n, 4, seed=1)
+    objs = []
+    for exchange in ("sliced", "psum"):
+        rep = Taper(g, 4, TaperConfig(
+            max_iterations=2, seed=0, field_backend="pallas_sharded",
+            halo_exchange=exchange)).invoke(part0, w)
+        objs.append(rep.objective[0])
+    assert objs[0] == pytest.approx(objs[1], rel=1e-5)
 
 
 # ---------------------------------------------------------------------------

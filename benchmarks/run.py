@@ -32,6 +32,8 @@ CORE = [
     # async serving loop: overlap win vs stop-the-world + warm dirty shards
     # (same device-count caveat as field_shard)
     "serve_loop",
+    # crash-safe serving: snapshot cost, WAL replay catch-up, degraded floor
+    "recovery",
 ]
 
 # integration benchmarks: skipped (by name) only when a genuinely optional

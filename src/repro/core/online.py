@@ -152,6 +152,10 @@ class OnlineTaper:
         self._freqs_at_invoke: Dict[str, float] = {}
         self._ipt_at_invoke: Optional[float] = None
         self._last_total_moves: Optional[int] = None
+        #: snapshot-restored traversal prior for arrival placement: a fresh
+        #: process has no field memo yet, but bitwise recovery parity needs
+        #: replayed placements to see the same ``Pr`` the crashed node used
+        self._restored_pr: Optional[np.ndarray] = None
 
     # -- inputs ---------------------------------------------------------------
     def observe(self, queries: Iterable) -> None:
@@ -198,6 +202,22 @@ class OnlineTaper:
         memo = self.taper._field_memo
         return memo[1] if memo is not None else None
 
+    def placement_pr(self) -> Optional[np.ndarray]:
+        """The traversal-probability prior arrival placement runs against:
+        the last evaluated field's ``Pr`` when one exists, else the prior a
+        snapshot restore carried over (``restore_placement_prior``)."""
+        fld = self._last_field()
+        if fld is not None:
+            return fld.pr
+        return self._restored_pr
+
+    def restore_placement_prior(self, pr: Optional[np.ndarray]) -> None:
+        """Install a snapshot-restored ``Pr`` prior for arrival placement.
+        Superseded by the first real field evaluation (the memo wins in
+        :meth:`placement_pr`)."""
+        self._restored_pr = (
+            None if pr is None else np.asarray(pr, dtype=np.float64))
+
     def _place_new(self, vs: np.ndarray) -> None:
         """Greedy arrival placement: argmax over partitions of the placed
         neighbours' traversal-probability mass (paper's intra-partition
@@ -207,8 +227,7 @@ class OnlineTaper:
         sizes = np.bincount(self.part[self.part >= 0], minlength=k).astype(np.int64)
         max_size = int(np.floor(
             (1.0 + self.taper.config.balance_eps) * g.n / k))
-        fld = self._last_field()
-        pr = fld.pr if fld is not None else None
+        pr = self.placement_pr()
         for v in vs.tolist():
             nbrs = g.neighbors(v).astype(np.int64)
             nbrs = nbrs[self.part[nbrs] >= 0]
@@ -355,13 +374,15 @@ class OnlineTaper:
             dirty_snapshot=self._dirty.copy(),
         )
 
-    def run_invocation(self, pending: PendingInvocation) -> TaperReport:
+    def run_invocation(self, pending: PendingInvocation,
+                       should_abort=None) -> TaperReport:
         """Execute the snapshotted invocation — safe on a worker thread as
         long as the graph does not mutate until the run returns (serving
-        loops defer ingest while a run is in flight)."""
+        loops defer ingest while a run is in flight).  ``should_abort`` is
+        forwarded to :meth:`Taper.invoke` (watchdog cancellation)."""
         pending.report = self.taper.invoke(
             pending.part_snapshot, pending.workload,
-            frontier=pending.frontier)
+            frontier=pending.frontier, should_abort=should_abort)
         return pending.report
 
     def commit_invocation(self, pending: PendingInvocation) -> TaperReport:

@@ -25,6 +25,17 @@ log = get_logger("core.taper")
 
 Workload = Sequence[Tuple[RPQ, float]]
 
+#: extroversion-field DP backends ordered by capability: serving loops
+#: degrade left-to-right on repeated device failure (losing scale, keeping
+#: availability) and probe back right-to-left once the fault clears
+FIELD_BACKEND_LADDER = ("pallas_sharded", "pallas", "jnp")
+
+
+class InvocationAborted(RuntimeError):
+    """Raised inside :meth:`Taper.invoke` when the caller's ``should_abort``
+    hook fires — a watchdog cancelling a stalled/abandoned run.  The
+    partition is untouched (enhancement only publishes via the report)."""
+
 
 @dataclass
 class TaperConfig:
@@ -253,6 +264,21 @@ class Taper:
                  self._redeal_counter)
         return True
 
+    def set_field_backend(self, backend: str) -> None:
+        """Switch the extroversion-field DP engine in place.
+
+        The serving loop's graceful-degradation ladder calls this to fall
+        from ``pallas_sharded`` toward ``jnp`` on repeated device failure
+        (and to probe back up).  Device-resident caches in ``_pre`` are
+        keyed per backend so they survive the round trip; only the field
+        memo (keyed on the old backend) is dropped."""
+        if backend not in FIELD_BACKEND_LADDER:
+            raise ValueError(f"unknown field backend {backend!r}")
+        if backend == self.config.field_backend:
+            return
+        self.config.field_backend = backend
+        self._field_memo = None
+
     # -- workload handling ---------------------------------------------------
     def build_trie(self, workload: Workload) -> TPSTry:
         return TPSTry.from_workload(
@@ -309,6 +335,7 @@ class Taper:
         workload: Union[Workload, TPSTry, TrieArrays],
         max_iterations: Optional[int] = None,
         frontier: Optional[np.ndarray] = None,
+        should_abort=None,
     ) -> TaperReport:
         """One TAPER invocation (def. 1): enhance ``part`` for the workload.
 
@@ -318,8 +345,16 @@ class Taper:
         grows with each iteration's moved vertices so improvements can
         propagate outward — paper §5.5's queue pruning generalised to
         topology deltas.
+
+        ``should_abort`` (optional zero-arg callable) is polled at iteration
+        boundaries; returning True raises :class:`InvocationAborted` — the
+        cooperative cancel a serving watchdog uses on an abandoned run, so
+        the thread releases the graph-immutability window promptly instead
+        of finishing work nobody will commit.
         """
         self._sync_graph()
+        if should_abort is not None and should_abort():
+            raise InvocationAborted("invocation aborted before start")
         if isinstance(workload, TrieArrays):
             arrays = workload
         elif isinstance(workload, TPSTry):
@@ -370,6 +405,9 @@ class Taper:
 
         iters = max_iterations or cfg.max_iterations
         for it in range(iters):
+            if should_abort is not None and should_abort():
+                raise InvocationAborted(
+                    f"invocation aborted at iteration {it + 1}")
             new_part, stats = swap_iteration(
                 self.g, part, fld, self.k, cfg.swap_config(), self._rng,
                 candidate_mask=cand_mask,

@@ -196,6 +196,56 @@ def compose_mutations(a: AppliedMutation, b: AppliedMutation) -> AppliedMutation
     )
 
 
+#: AppliedMutation array fields persisted by the mutation-log serializers,
+#: with their storage dtypes (scalar fields travel in the manifest instead)
+_MUTATION_ARRAY_FIELDS = (
+    ("added_src", np.int32), ("added_dst", np.int32),
+    ("removed_src", np.int32), ("removed_dst", np.int32),
+    ("old2new", np.int64), ("new_edge_pos", np.int64),
+    ("relabel_v", np.int64), ("relabel_old", np.int32),
+    ("relabel_new", np.int32),
+)
+
+
+def mutation_log_state(log: Sequence[AppliedMutation]):
+    """Flatten a mutation log for persistence: ``(arrays, meta)`` where
+    ``arrays`` maps ``mlog{i}_{field}`` to the i-th record's edge/relabel
+    arrays (npz-friendly) and ``meta`` holds each record's scalar version
+    span — so a restored graph keeps the compacted log and its version
+    spans, and slow consumers (executor DP patching) span-walk across the
+    restart exactly as they would across any other gap."""
+    arrays: Dict[str, np.ndarray] = {}
+    meta = []
+    for i, rec in enumerate(log):
+        for name, dt in _MUTATION_ARRAY_FIELDS:
+            arrays[f"mlog{i}_{name}"] = np.asarray(getattr(rec, name), dt)
+        meta.append({
+            "version": int(rec.version),
+            "version_base": int(rec.version_base),
+            "n_before": int(rec.n_before),
+            "n_after": int(rec.n_after),
+        })
+    return arrays, meta
+
+
+def mutation_log_from_state(arrays, meta) -> List[AppliedMutation]:
+    """Inverse of :func:`mutation_log_state`."""
+    out: List[AppliedMutation] = []
+    for i, m in enumerate(meta):
+        fields = {
+            name: np.asarray(arrays[f"mlog{i}_{name}"], dt)
+            for name, dt in _MUTATION_ARRAY_FIELDS
+        }
+        out.append(AppliedMutation(
+            version=int(m["version"]),
+            n_before=int(m["n_before"]),
+            n_after=int(m["n_after"]),
+            version_base=int(m["version_base"]),
+            **fields,
+        ))
+    return out
+
+
 @dataclass
 class LabelledGraph:
     """A vertex-labelled graph ``G = (V, E, L_V, l)``.

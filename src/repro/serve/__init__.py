@@ -1,19 +1,43 @@
 from repro.serve.engine import GraphQueryEngine, RequestResult, ServeConfig
+from repro.serve.faults import (
+    FaultInjector,
+    FaultSpec,
+    InjectedFault,
+    corrupt_latest_snapshot,
+)
 from repro.serve.ingest import IngestQueue, coalesce_mutations
 from repro.serve.loop import ServeLoopConfig, ServingLoop
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queueing import Rejection, RequestQueue, ServeTicket
+from repro.serve.snapshot import (
+    MutationJournal,
+    RestoreResult,
+    ServingSnapshotter,
+    capture_serving_state,
+    plan_elastic_restore,
+    restore_serving_state,
+)
 
 __all__ = [
+    "FaultInjector",
+    "FaultSpec",
     "GraphQueryEngine",
     "IngestQueue",
+    "InjectedFault",
+    "MutationJournal",
     "Rejection",
     "RequestQueue",
     "RequestResult",
+    "RestoreResult",
     "ServeConfig",
     "ServeLoopConfig",
     "ServeMetrics",
     "ServeTicket",
     "ServingLoop",
+    "ServingSnapshotter",
+    "capture_serving_state",
     "coalesce_mutations",
+    "corrupt_latest_snapshot",
+    "plan_elastic_restore",
+    "restore_serving_state",
 ]

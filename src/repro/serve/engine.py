@@ -36,6 +36,9 @@ class ServeConfig:
     #: completed requests before the first (bootstrap) invocation may fire
     first_invocation_after: int = 0
     micro_batch: int = 32
+    #: directory for durable snapshots + mutation WAL (None = crash safety
+    #: off); passed straight through to ``ServeLoopConfig.snapshot_dir``
+    snapshot_dir: Optional[str] = None
     taper: TaperConfig = field(default_factory=lambda: TaperConfig(max_iterations=4))
 
 
@@ -75,6 +78,7 @@ class GraphQueryEngine:
                     self.cfg.min_requests_between_invocations),
                 first_invocation_after=self.cfg.first_invocation_after,
                 overlap_invocations=False,  # inline drive: synchronous
+                snapshot_dir=self.cfg.snapshot_dir,
             ),
         )
         self.g = g
@@ -128,6 +132,10 @@ class GraphQueryEngine:
     def apply_mutations(self, batch: MutationBatch) -> None:
         """Queue a topology delta; applied before the next micro-batch."""
         self.loop.submit_mutations(batch)
+
+    def snapshot(self) -> None:
+        """Persist the full serving state now (requires ``snapshot_dir``)."""
+        self.loop.snapshot(sync=True)
 
     # -- online maintenance --------------------------------------------------
     def workload_drift(self) -> float:

@@ -32,23 +32,67 @@ architecture note):
 ``overlap_invocations=False`` degrades the same loop to the stop-the-world
 baseline (the invocation runs inline on the worker, serving stalls) — the
 comparison ``benchmarks/serve_loop.py`` quantifies.
+
+Crash safety & graceful degradation (PR 6; ``serve/README.md`` has the
+lifecycle diagram):
+
+* **durability** — with ``snapshot_dir`` set, mutations are journaled on
+  ingest *before* they apply: each drained coalesced group writes its
+  members to the WAL, applies, then records the apply outcome
+  (:class:`~repro.serve.snapshot.MutationJournal`), and each committed
+  invocation persists a full serving snapshot on a background thread
+  (:class:`~repro.serve.snapshot.ServingSnapshotter`).
+  :meth:`ServingLoop.restore` = latest readable snapshot + WAL replay of
+  the exact apply stream — bitwise parity with a node that never crashed;
+* **watchdog** — an overlapped invocation exceeding
+  ``invocation_timeout_s`` is cooperatively aborted (the run thread polls
+  an abort flag at iteration boundaries) and abandoned; ingest and new
+  invocations stay gated until the zombie thread actually exits (the
+  enhancement ran against the live graph, which must stay immutable under
+  it), while request serving continues on the old partition throughout;
+* **backend ladder** — ``backend_fallback_after`` consecutive invocation
+  failures walk ``field_backend`` one rung down
+  ``FIELD_BACKEND_LADDER`` (``pallas_sharded → pallas → jnp``: lose scale,
+  keep availability); after ``backend_probe_after`` healthy commits the
+  loop probes one rung back up, doubling the dwell after each failed probe
+  so a flapping device converges to its stable rung;
+* **fault injection** — a :class:`~repro.serve.faults.FaultInjector`
+  (``ServeLoopConfig.faults``) arms the loop's named fault sites
+  (invocation body, shard upload, coalesced ingest group) so tests and
+  ``benchmarks/recovery.py`` can drive every degradation path on demand.
 """
 from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as dc_replace
+from pathlib import Path
 from typing import Dict, List, Optional, Union
 
 import numpy as np
 
 from repro.core.online import OnlinePolicy, OnlineTaper, PendingInvocation
 from repro.core.rpq import RPQ
-from repro.core.taper import TaperConfig
+from repro.core.taper import FIELD_BACKEND_LADDER, InvocationAborted, TaperConfig
 from repro.graphs.graph import LabelledGraph, MutationBatch
+from repro.serve.faults import (
+    FaultInjector,
+    InjectedFault,
+    SITE_INGEST_GROUP,
+    SITE_INVOCATION,
+    SITE_SHARD_UPLOAD,
+)
 from repro.serve.ingest import IngestQueue
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queueing import Rejection, RequestQueue, ServeTicket
+from repro.serve.snapshot import (
+    MutationJournal,
+    RestoreResult,
+    ServingSnapshotter,
+    WAL_NAME,
+    capture_serving_state,
+    restore_serving_state,
+)
 from repro.utils import get_logger
 from repro.workload.executor import QueryExecutor
 
@@ -71,6 +115,31 @@ class ServeLoopConfig:
     #: how long an idle worker waits for requests before re-polling
     batch_wait_s: float = 0.005
     metrics_window: int = 2048
+    # -- durability (None = crash safety off, the pre-PR6 behaviour) ----------
+    #: directory for snapshots + the mutation WAL
+    snapshot_dir: Optional[str] = None
+    #: persist a snapshot (async, off the worker) after every committed
+    #: invocation — the commit already repacked device state, and the WAL
+    #: window stays invocation-free, which is what recovery parity leans on
+    snapshot_on_commit: bool = True
+    #: additionally snapshot at this wall-clock period while quiescent
+    snapshot_every_s: Optional[float] = None
+    snapshot_keep: int = 3
+    #: fsync the WAL on every append (power-loss durability; slower)
+    wal_sync: bool = False
+    # -- graceful degradation -------------------------------------------------
+    #: abort an overlapped invocation running longer than this (None = off)
+    invocation_timeout_s: Optional[float] = None
+    #: base retry backoff after a failed invocation (doubles per
+    #: consecutive failure)
+    invocation_retry_backoff_s: float = 0.05
+    #: consecutive invocation failures before falling one rung down the
+    #: field-backend ladder
+    backend_fallback_after: int = 2
+    #: healthy commits at a degraded rung before probing back up
+    backend_probe_after: int = 8
+    #: fault-injection registry (tests / recovery benchmark)
+    faults: Optional[FaultInjector] = None
 
 
 class ServingLoop:
@@ -78,23 +147,31 @@ class ServingLoop:
 
     def __init__(
         self,
-        g: LabelledGraph,
-        k: int,
+        g: Optional[LabelledGraph] = None,
+        k: Optional[int] = None,
         part: Optional[np.ndarray] = None,
         taper_config: Optional[TaperConfig] = None,
         policy: Optional[OnlinePolicy] = None,
         config: Optional[ServeLoopConfig] = None,
         sketch=None,
+        ot: Optional[OnlineTaper] = None,
     ):
         self.cfg = config or ServeLoopConfig()
-        if policy is None:
-            # serving loops bootstrap their first fit from live traffic
-            policy = OnlinePolicy(bootstrap_after_ticks=0)
-        self.ot = OnlineTaper(
-            g, k, part=part, config=taper_config, policy=policy,
-            sketch=sketch)
-        self.g = g
-        self.k = k
+        if ot is not None:
+            # restore path: adopt a fully reconstructed OnlineTaper verbatim
+            self.ot = ot
+        else:
+            if g is None or k is None:
+                raise ValueError("g and k are required unless ot= is given")
+            if policy is None:
+                # serving loops bootstrap their first fit from live traffic
+                policy = OnlinePolicy(bootstrap_after_ticks=0)
+            self.ot = OnlineTaper(
+                g, k, part=part, config=taper_config, policy=policy,
+                sketch=sketch)
+        self.g = self.ot.g
+        self.k = self.ot.k
+        g = self.g
         self.executor = QueryExecutor(g)
         # admission classes: the queue grades backpressure by per-query
         # sketch frequency (hot queries have warm plans/DP rows); the
@@ -115,6 +192,36 @@ class ServingLoop:
         self._ipt_ewma: Optional[float] = None
         self._stop = threading.Event()
         self._worker: Optional[threading.Thread] = None
+        # -- crash safety ------------------------------------------------------
+        self._faults = self.cfg.faults
+        self._journal: Optional[MutationJournal] = None
+        self._snapshotter: Optional[ServingSnapshotter] = None
+        #: WAL seq of the last coalesced group whose effect — applied or
+        #: validation-dropped — is in the live state; snapshots record it
+        #: so restore replays exactly the tail
+        self._applied_seq = 0
+        self._last_snapshot_t = time.monotonic()
+        if self.cfg.snapshot_dir is not None:
+            snap_dir = Path(self.cfg.snapshot_dir)
+            self._journal = MutationJournal(snap_dir / WAL_NAME,
+                                            sync=self.cfg.wal_sync)
+            self._snapshotter = ServingSnapshotter(
+                snap_dir, keep=self.cfg.snapshot_keep, journal=self._journal)
+        # -- graceful degradation ---------------------------------------------
+        #: the configured rung; anything below it counts as degraded
+        self._base_backend = self.ot.taper.config.field_backend
+        self._consec_invocation_failures = 0
+        self._backoff_until = 0.0
+        self._healthy_since_fallback = 0
+        self._probe_after = self.cfg.backend_probe_after
+        #: per-run cooperative-cancel flag (fresh Event per overlapped run)
+        self._abort_flag = threading.Event()
+        #: watchdog-abandoned invocation threads still winding down; ingest
+        #: and new invocations are gated until they exit (the run reads the
+        #: live graph, which must stay immutable under it)
+        self._abandoned: List[threading.Thread] = []
+        #: set by restore(); None on a fresh loop
+        self.restore_result: Optional[RestoreResult] = None
 
     # -- client API -----------------------------------------------------------
     @property
@@ -128,8 +235,16 @@ class ServingLoop:
 
     def submit_mutations(self, batch: MutationBatch) -> Union[bool, Rejection]:
         """Queue one topology delta (any thread); applied by the worker
-        between invocations."""
+        between invocations.  With durability on, the batch is journaled at
+        the ingest drain, *before* it applies — the durability boundary is
+        the next pump round's drain, not admission; producers needing a
+        hard guarantee watch ``stats()["journal_seq"]`` advance."""
         return self.ingest.submit(batch)
+
+    @property
+    def degraded(self) -> bool:
+        """True while serving below the configured field-backend rung."""
+        return self.ot.taper.config.field_backend != self._base_backend
 
     def stats(self) -> Dict[str, float]:
         return self.metrics.snapshot(
@@ -140,11 +255,71 @@ class ServingLoop:
             rejected_mutations=self.ingest.rejected,
             failed_mutations=self.ingest.failed,
             field_stats=self.ot.taper._pre.get("_halo_stats"),
+            field_backend=self.ot.taper.config.field_backend,
+            degraded=self.degraded,
+            worker_error=("" if self._worker_error is None
+                          else repr(self._worker_error)),
+            invocation_error=("" if self._invocation_error is None
+                              else repr(self._invocation_error)),
+            journal_seq=self._applied_seq,
         )
 
     @property
     def invocation_in_flight(self) -> bool:
         return self._pending is not None
+
+    # -- durability -----------------------------------------------------------
+    def snapshot(self, sync: bool = True) -> None:
+        """Capture and persist the full serving state now.  Call from the
+        worker thread (a pump round) or while the loop is stopped — the
+        capture copies host state; with ``sync=False`` the write itself
+        happens on the snapshotter's background thread."""
+        if self._snapshotter is None:
+            raise RuntimeError("snapshot_dir not configured")
+        try:
+            state = capture_serving_state(self.ot, self._applied_seq)
+            self._snapshotter.save(state, sync=sync)
+            self.metrics.record_snapshot(True)
+            self._last_snapshot_t = time.monotonic()
+        except BaseException:
+            self.metrics.record_snapshot(False)
+            log.exception("serving snapshot failed; continuing without")
+
+    @classmethod
+    def restore(
+        cls,
+        directory,
+        taper_config: Optional[TaperConfig] = None,
+        policy: Optional[OnlinePolicy] = None,
+        config: Optional[ServeLoopConfig] = None,
+        n_shards: Optional[int] = None,
+        snap_id: Optional[int] = None,
+    ) -> "ServingLoop":
+        """Bring a crashed node back: latest readable snapshot under
+        ``directory`` + WAL replay, then a loop serving that state.  Pass
+        ``n_shards`` to restore onto a different shard count (elastic
+        restore; the k→S shard fold is recomputed and
+        ``restore_result.elastic_plan`` carries the byte-movement budget).
+        The restored loop keeps journaling/snapshotting into the same
+        directory and starts at the *configured* backend rung — a restart
+        is the natural probe that a device fault has cleared."""
+        cfg = config or ServeLoopConfig()
+        if policy is None:
+            policy = OnlinePolicy(bootstrap_after_ticks=0)
+        if cfg.snapshot_dir is None:
+            cfg = dc_replace(cfg, snapshot_dir=str(directory))
+        res = restore_serving_state(
+            directory, taper_config=taper_config, policy=policy,
+            n_shards=n_shards, snap_id=snap_id)
+        loop = cls(config=cfg, ot=res.ot)
+        loop._applied_seq = res.journal_seq
+        loop.metrics.replayed_mutations = res.replayed
+        loop.restore_result = res
+        if loop.ot.taper.config.field_backend == "pallas_sharded":
+            # re-derive device-resident packings eagerly so the first
+            # invocation after restart starts warm, like a running node's
+            loop._warm_devices()
+        return loop
 
     # -- lifecycle ------------------------------------------------------------
     def start(self) -> "ServingLoop":
@@ -172,7 +347,12 @@ class ServingLoop:
         if drain:
             while self._pump_once(wait_s=0.0, allow_trigger=False):
                 pass
-            self._apply_ingest()
+            if not self._zombies_active():
+                self._apply_ingest()
+        if self._snapshotter is not None:
+            self._snapshotter.close()
+        if self._journal is not None:
+            self._journal.close()
         if self._worker_error is not None:
             raise self._worker_error
         if self._invocation_error is not None:
@@ -204,7 +384,7 @@ class ServingLoop:
 
     def _pump_once(self, wait_s: float, allow_trigger: bool) -> int:
         self._commit_if_done()
-        if self._pending is None:
+        if self._pending is None and not self._zombies_active():
             self._apply_ingest()
         batch = self.requests.take_batch(self.cfg.micro_batch, timeout=wait_s)
         if batch:
@@ -212,6 +392,13 @@ class ServingLoop:
             if allow_trigger:
                 self._maybe_trigger()
         self._commit_if_done()
+        if (self._snapshotter is not None
+                and self.cfg.snapshot_every_s is not None
+                and self._pending is None
+                and not self._zombies_active()
+                and time.monotonic() - self._last_snapshot_t
+                >= self.cfg.snapshot_every_s):
+            self.snapshot(sync=False)
         return len(batch)
 
     def _serve_batch(self, batch: List[ServeTicket]) -> None:
@@ -242,6 +429,12 @@ class ServingLoop:
         reason = self.ot.poll(self._ipt_ewma)  # one tick per micro-batch
         if reason is None or self._pending is not None:
             return
+        if self._zombies_active():
+            # an abandoned run is still reading the graph; starting another
+            # enhancement (or mutating) under it is not safe — keep serving
+            return
+        if time.monotonic() < self._backoff_until:
+            return  # abort-and-retry backoff after a failed invocation
         if self.ot.invocations == 0:
             if self.metrics.completed < self.cfg.first_invocation_after:
                 return
@@ -253,17 +446,25 @@ class ServingLoop:
             return
         self._pending = pending
         if self.cfg.overlap_invocations:
-            self._invocation_done.clear()
+            self._invocation_done = threading.Event()
+            self._abort_flag = threading.Event()
             self._invocation_error = None   # only the latest run's outcome
             self._invocation_t0 = time.perf_counter()
             self._inflight = threading.Thread(
-                target=self._invocation_main, name="serve-invocation",
-                daemon=True)
+                target=self._invocation_main,
+                args=(pending, self._abort_flag, self._invocation_done),
+                name="serve-invocation", daemon=True)
             self._inflight.start()
         else:
             t0 = time.perf_counter()
             try:
+                if self._faults is not None:
+                    self._faults.fire(SITE_INVOCATION)
                 self.ot.run_invocation(pending)
+            except BaseException:
+                self.metrics.record_invocation_failure()
+                self._note_invocation_failure()
+                raise
             finally:
                 # a failed run must not leave the loop looking mid-flight
                 # (that would disable ingest and all future invocations);
@@ -274,19 +475,37 @@ class ServingLoop:
             self.ot.commit_invocation(pending)
             self.metrics.record_invocation(wall, overlapped=False)
             self._requests_since_invocation = 0
+            self._note_invocation_success()
+            self._warm_devices()
+            if self._snapshotter is not None and self.cfg.snapshot_on_commit:
+                self.snapshot(sync=False)
 
-    def _invocation_main(self) -> None:
+    def _invocation_main(self, pending: PendingInvocation,
+                         abort: threading.Event,
+                         done: threading.Event) -> None:
         try:
-            self.ot.run_invocation(self._pending)
+            if self._faults is not None:
+                self._faults.fire(SITE_INVOCATION)
+            if abort.is_set():
+                raise InvocationAborted("aborted before start")
+            self.ot.run_invocation(pending, should_abort=abort.is_set)
+        except InvocationAborted:
+            # the watchdog already did the bookkeeping when it abandoned us;
+            # exiting promptly is this thread's whole job now
+            log.info("abandoned invocation run exited cooperatively")
         except BaseException as exc:  # surfaced by stop() if still latest
-            self._invocation_error = exc
-            self.metrics.record_invocation_failure()
-            log.exception("overlapped TAPER invocation failed")
+            if not abort.is_set():
+                self._invocation_error = exc
+                self.metrics.record_invocation_failure()
+                log.exception("overlapped TAPER invocation failed")
         finally:
-            self._invocation_done.set()
+            done.set()
 
     def _commit_if_done(self) -> None:
-        if self._inflight is None or not self._invocation_done.is_set():
+        if self._inflight is None:
+            return
+        if not self._invocation_done.is_set():
+            self._check_watchdog()
             return
         self._inflight.join()
         wall = time.perf_counter() - self._invocation_t0
@@ -299,60 +518,182 @@ class ServingLoop:
         self._inflight = None
         self._requests_since_invocation = 0
         if committed:
+            self._note_invocation_success()
             # the commit may have re-dealt the shard map along the enhanced
             # partition (shard_map_source="partition"); re-pack and upload
             # now, on the worker between batches, so the next overlapped
             # invocation starts from a warm re-dealt layout
             self._warm_devices()
+            if self._snapshotter is not None and self.cfg.snapshot_on_commit:
+                self.snapshot(sync=False)
+        else:
+            self._note_invocation_failure()
+
+    def _check_watchdog(self) -> None:
+        """Abort-and-abandon an overlapped run that blew its timeout.
+
+        The run is cancelled cooperatively (``InvocationAborted`` at the
+        next iteration boundary) and moved to the zombie list; serving
+        continues immediately on the old partition, while ingest and new
+        invocations wait for the zombie to actually exit."""
+        timeout = self.cfg.invocation_timeout_s
+        if timeout is None or self._inflight is None:
+            return
+        if time.perf_counter() - self._invocation_t0 < timeout:
+            return
+        self._abort_flag.set()
+        self._abandoned.append(self._inflight)
+        err = TimeoutError(
+            f"invocation exceeded watchdog timeout ({timeout:g}s); "
+            "aborted and abandoned")
+        log.warning(str(err))
+        self._invocation_error = err
+        self.metrics.record_watchdog_abort()
+        self.metrics.record_invocation_failure()
+        self._pending = None
+        self._inflight = None
+        # fresh event: the zombie holds (and will set) the old one
+        self._invocation_done = threading.Event()
+        self._note_invocation_failure()
+
+    def _zombies_active(self) -> bool:
+        if self._abandoned:
+            self._abandoned = [t for t in self._abandoned if t.is_alive()]
+        return bool(self._abandoned)
+
+    # -- degradation ladder ---------------------------------------------------
+    def _note_invocation_failure(self) -> None:
+        self._consec_invocation_failures += 1
+        backoff = (self.cfg.invocation_retry_backoff_s
+                   * 2 ** (self._consec_invocation_failures - 1))
+        self._backoff_until = time.monotonic() + backoff
+        if self._consec_invocation_failures >= self.cfg.backend_fallback_after:
+            self._fall_back_backend()
+
+    def _fall_back_backend(self) -> None:
+        cur = self.ot.taper.config.field_backend
+        try:
+            i = FIELD_BACKEND_LADDER.index(cur)
+        except ValueError:
+            return
+        if i + 1 >= len(FIELD_BACKEND_LADDER):
+            return  # already at the bottom rung; keep retrying with backoff
+        nxt = FIELD_BACKEND_LADDER[i + 1]
+        self.ot.taper.set_field_backend(nxt)
+        self.metrics.record_backend_fallback()
+        self._consec_invocation_failures = 0
+        self._healthy_since_fallback = 0
+        log.warning("field backend degraded %s -> %s after repeated "
+                    "invocation failures", cur, nxt)
+
+    def _note_invocation_success(self) -> None:
+        self._consec_invocation_failures = 0
+        self._backoff_until = 0.0
+        cur = self.ot.taper.config.field_backend
+        if cur == self._base_backend:
+            self._probe_after = self.cfg.backend_probe_after
+            return
+        self._healthy_since_fallback += 1
+        if self._healthy_since_fallback < self._probe_after:
+            return
+        i = FIELD_BACKEND_LADDER.index(cur)
+        try:
+            base_i = FIELD_BACKEND_LADDER.index(self._base_backend)
+        except ValueError:
+            base_i = 0
+        if i <= base_i:
+            return
+        up = FIELD_BACKEND_LADDER[i - 1]
+        self.ot.taper.set_field_backend(up)
+        self.metrics.record_backend_recovery()
+        # a failed probe falls straight back down (the ladder counters
+        # re-engage); doubling the dwell makes a flapping device converge
+        # onto its stable rung instead of oscillating
+        self._probe_after *= 2
+        self._healthy_since_fallback = 0
+        log.info("field backend probing recovery %s -> %s", cur, up)
 
     def _finish_inflight(self) -> None:
         if self._inflight is not None:
             self._invocation_done.wait()
             self._commit_if_done()
+        for t in self._abandoned:
+            # abort flag is set; the zombie exits at its next iteration
+            # boundary — wait it out so shutdown leaves no thread behind
+            t.join()
+        self._abandoned = []
 
     # -- ingest ---------------------------------------------------------------
     def _apply_ingest(self) -> None:
         applied = 0
         for merged, members in self.ingest.drain_groups():
+            # WAL boundary: the group is journaled before it applies, and
+            # its outcome (fold vs per-member fallback, member fates) right
+            # after — replay reproduces the exact apply stream
+            gseq = (self._journal.append_group(members)
+                    if self._journal is not None else self._applied_seq + 1)
+            flags = None
             try:
+                if self._faults is not None:
+                    self._faults.fire(SITE_INGEST_GROUP)
                 self.ot.apply_mutations(merged)
                 applied += 1
-                continue
-            except ValueError:
-                # a malformed producer batch poisoned the fold; apply the
-                # member batches individually so only the bad one is lost
-                # (apply_mutations validates before touching any state, so
-                # the failed fold left the graph untouched)
+                mode = "merged"
+            except (ValueError, InjectedFault):
+                # a malformed producer batch (or injected poison) spoiled
+                # the fold; apply the member batches individually so only
+                # the bad one is lost (apply_mutations validates before
+                # touching any state, so the failed fold left the graph
+                # untouched)
                 log.exception(
-                    "coalesced ingest group failed validation; retrying "
+                    "coalesced ingest group failed; retrying "
                     "its %d member batches individually", len(members))
-            for b in members:
-                try:
-                    self.ot.apply_mutations(b)
-                    applied += 1
-                except ValueError:
-                    self.ingest.failed += 1
-                    log.exception("dropping malformed ingest batch")
+                mode, flags = "members", []
+                for b in members:
+                    try:
+                        self.ot.apply_mutations(b)
+                        applied += 1
+                        flags.append(True)
+                    except ValueError:
+                        self.ingest.failed += 1
+                        flags.append(False)
+                        log.exception("dropping malformed ingest batch")
+            if self._journal is not None:
+                self._journal.append_outcome(
+                    gseq, mode, flags if flags is not None
+                    else [True] * len(members))
+            self._applied_seq = gseq
         if applied:
             self._warm_devices()
 
     def _warm_devices(self) -> None:
         """Stream the freshly patched dirty shards onto the mesh now, off
         the invocation's critical path, so the next overlapped field
-        evaluation starts from warm device buffers."""
+        evaluation starts from warm device buffers.  An upload failure is
+        survivable — serving continues on the previous device buffers and
+        the next field evaluation re-uploads lazily — but counts toward the
+        degradation ladder like an invocation failure."""
         taper = self.ot.taper
         if taper.config.field_backend != "pallas_sharded":
             return
-        import jax
+        try:
+            if self._faults is not None:
+                self._faults.fire(SITE_SHARD_UPLOAD)
+            import jax
 
-        from repro.core.visitor import _sharded_device_arrays
+            from repro.core.visitor import _sharded_device_arrays
 
-        pre = taper._pre
-        mesh = pre.get("_mesh")
-        n_shards = (int(mesh.shape["model"]) if mesh is not None
-                    else len(jax.devices()))
-        token, order = pre.get("_shard_order") or ("stripe", None)
-        sp = self.g.vm_packing_sharded(
-            n_shards, cnt=self.g.cached_neighbor_label_counts(),
-            order=order, order_token=token)
-        _sharded_device_arrays(sp, pre)
+            pre = taper._pre
+            mesh = pre.get("_mesh")
+            n_shards = (int(mesh.shape["model"]) if mesh is not None
+                        else len(jax.devices()))
+            token, order = pre.get("_shard_order") or ("stripe", None)
+            sp = self.g.vm_packing_sharded(
+                n_shards, cnt=self.g.cached_neighbor_label_counts(),
+                order=order, order_token=token)
+            _sharded_device_arrays(sp, pre)
+        except BaseException:
+            self.metrics.record_upload_failure()
+            self._note_invocation_failure()
+            log.exception("shard upload failed; serving continues on the "
+                          "previous device state")

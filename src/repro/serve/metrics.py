@@ -63,10 +63,46 @@ class ServeMetrics:
         self.completed_during_invocation = 0
         self.partition_swaps = 0
         self.invocation_failures = 0
+        # -- health / degradation (PR 6) --------------------------------------
+        #: invocations cancelled by the watchdog after exceeding the timeout
+        self.watchdog_aborts = 0
+        #: times the loop fell one rung down the field-backend ladder
+        self.backend_fallbacks = 0
+        #: times a recovery probe climbed back up a rung
+        self.backend_recoveries = 0
+        #: failed device uploads of the sharded packing (_warm_devices)
+        self.upload_failures = 0
+        self.snapshots_taken = 0
+        self.snapshot_failures = 0
+        #: WAL batches re-applied at restore (set once by ServingLoop.restore)
+        self.replayed_mutations = 0
 
     def record_invocation_failure(self) -> None:
         with self._lock:
             self.invocation_failures += 1
+
+    def record_watchdog_abort(self) -> None:
+        with self._lock:
+            self.watchdog_aborts += 1
+
+    def record_backend_fallback(self) -> None:
+        with self._lock:
+            self.backend_fallbacks += 1
+
+    def record_backend_recovery(self) -> None:
+        with self._lock:
+            self.backend_recoveries += 1
+
+    def record_upload_failure(self) -> None:
+        with self._lock:
+            self.upload_failures += 1
+
+    def record_snapshot(self, ok: bool = True) -> None:
+        with self._lock:
+            if ok:
+                self.snapshots_taken += 1
+            else:
+                self.snapshot_failures += 1
 
     def record_batch(self, latencies, ipts, overlapped: bool) -> None:
         with self._lock:
@@ -91,7 +127,10 @@ class ServeMetrics:
     def snapshot(self, queue_depth: int = 0, ingest_depth: int = 0,
                  rejected_requests: int = 0, rejected_cold_requests: int = 0,
                  rejected_mutations: int = 0, failed_mutations: int = 0,
-                 field_stats: Dict = None) -> Dict[str, float]:
+                 field_stats: Dict = None, field_backend: str = "",
+                 degraded: bool = False, worker_error: str = "",
+                 invocation_error: str = "",
+                 journal_seq: int = 0) -> Dict[str, float]:
         """Flat dict of the current SLO picture (plain python scalars).
 
         ``field_stats`` is the sharded field's last measured exchange
@@ -129,4 +168,23 @@ class ServeMetrics:
                 "completed_during_invocation":
                     self.completed_during_invocation,
                 "partition_swaps": self.partition_swaps,
+                # -- health / degradation -------------------------------------
+                # "healthy" means: no unrecovered worker or invocation error
+                # and the loop is serving at its configured (base) backend
+                # rung; a watchdog abort or failed run clears only when a
+                # later invocation starts clean
+                "healthy": int(not degraded and not worker_error
+                               and not invocation_error),
+                "degraded": int(bool(degraded)),
+                "field_backend": field_backend,
+                "worker_error": worker_error,
+                "invocation_error": invocation_error,
+                "watchdog_aborts": self.watchdog_aborts,
+                "backend_fallbacks": self.backend_fallbacks,
+                "backend_recoveries": self.backend_recoveries,
+                "upload_failures": self.upload_failures,
+                "snapshots_taken": self.snapshots_taken,
+                "snapshot_failures": self.snapshot_failures,
+                "replayed_mutations": self.replayed_mutations,
+                "journal_seq": journal_seq,
             }

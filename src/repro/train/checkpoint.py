@@ -34,6 +34,26 @@ def _flatten_with_paths(tree):
     return keys, vals, treedef
 
 
+def atomic_dir_publish(parent: Path, final_name: str, writer) -> Path:
+    """Write a directory atomically: ``writer(tmp_path)`` populates a fresh
+    temp dir under ``parent``, which is then ``os.replace``d to
+    ``parent/final_name`` — a crash mid-write never corrupts (or even
+    reveals) a partially written directory.  Replaces an existing
+    ``final_name``.  Shared by checkpointing and the serving snapshotter."""
+    parent = Path(parent)
+    final = parent / final_name
+    tmp = Path(tempfile.mkdtemp(dir=parent, prefix=".tmp_"))
+    try:
+        writer(tmp)
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3, async_save: bool = False):
         self.dir = Path(directory)
@@ -41,6 +61,10 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        # serializes join-then-spawn: without it two concurrent save()
+        # callers can both pass the join, overwrite each other's handle and
+        # interleave their writes with keep-pruning
+        self._save_lock = threading.Lock()
 
     # -- save -----------------------------------------------------------------
     def save(self, step: int, state: Dict[str, Any],
@@ -48,25 +72,33 @@ class CheckpointManager:
         """state: pytree (e.g. {"params": ..., "opt_state": ...})."""
         host_state = jax.device_get(state)
         if self.async_save:
-            self.wait()
-            self._thread = threading.Thread(
-                target=self._write, args=(step, host_state, metadata or {}),
-                daemon=True)
-            self._thread.start()
+            with self._save_lock:
+                if self._thread is not None:
+                    self._thread.join()
+                self._thread = threading.Thread(
+                    target=self._write,
+                    args=(step, host_state, metadata or {}), daemon=True)
+                self._thread.start()
         else:
-            self._write(step, host_state, metadata or {})
+            with self._save_lock:
+                self._write(step, host_state, metadata or {})
 
     def wait(self) -> None:
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        with self._save_lock:
+            t, self._thread = self._thread, None
+        if t is not None:
+            t.join()
+
+    def close(self) -> None:
+        """Join any in-flight async save; the manager stays usable (a later
+        ``save`` simply spawns a fresh writer)."""
+        self.wait()
 
     def _write(self, step: int, host_state, metadata: Dict) -> None:
         t0 = time.time()
         keys, vals, _ = _flatten_with_paths(host_state)
-        final = self.dir / f"step_{step:010d}"
-        tmp = Path(tempfile.mkdtemp(dir=self.dir, prefix=".tmp_"))
-        try:
+
+        def writer(tmp: Path) -> None:
             np.savez(tmp / "arrays.npz",
                      **{f"a{i}": np.asarray(v) for i, v in enumerate(vals)})
             manifest = {
@@ -76,12 +108,8 @@ class CheckpointManager:
                 "metadata": metadata,
             }
             (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
-            if final.exists():
-                shutil.rmtree(final)
-            os.replace(tmp, final)  # atomic publish
-        except BaseException:
-            shutil.rmtree(tmp, ignore_errors=True)
-            raise
+
+        atomic_dir_publish(self.dir, f"step_{step:010d}", writer)
         self._gc()
         log.info("checkpoint step %d saved in %.2fs", step, time.time() - t0)
 

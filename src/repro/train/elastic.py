@@ -35,6 +35,24 @@ def reshard_restore(
     return ckpt.restore(like, step=step, shardings=shardings)
 
 
+def movement_plan(total_state_bytes: int, old_chips: int, new_chips: int,
+                  est_transfer_bytes: Optional[int] = None) -> Dict[str, Any]:
+    """The reshard-plan dict shape shared by every elastic transition —
+    training checkpoints (:func:`plan_reshard`) and serving snapshots
+    (``repro.serve.snapshot.plan_elastic_restore``) report byte-movement
+    budgets through the same keys so operator tooling reads one schema."""
+    return {
+        "total_state_bytes": int(total_state_bytes),
+        "old_chips": int(old_chips),
+        "new_chips": int(new_chips),
+        "bytes_per_new_chip": total_state_bytes / max(new_chips, 1),
+        # default worst case: every new chip pulls its full shard
+        "est_transfer_bytes": int(
+            total_state_bytes if est_transfer_bytes is None
+            else est_transfer_bytes),
+    }
+
+
 def plan_reshard(like, logical_tree, old_mesh, new_mesh,
                  rules_old=None, rules_new=None) -> Dict[str, Any]:
     """Byte-movement estimate for an elastic transition."""
@@ -42,13 +60,5 @@ def plan_reshard(like, logical_tree, old_mesh, new_mesh,
     rules_new = rules_new or rules_for(new_mesh)
     total_bytes = sum(
         int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(like))
-    old_chips = int(old_mesh.devices.size)
-    new_chips = int(new_mesh.devices.size)
-    return {
-        "total_state_bytes": total_bytes,
-        "old_chips": old_chips,
-        "new_chips": new_chips,
-        "bytes_per_new_chip": total_bytes / max(new_chips, 1),
-        # worst case: every new chip pulls its full shard from elsewhere
-        "est_transfer_bytes": total_bytes,
-    }
+    return movement_plan(
+        total_bytes, int(old_mesh.devices.size), int(new_mesh.devices.size))

@@ -85,3 +85,31 @@ class FrequencySketch:
         """[(RPQ, freq)] snapshot for TAPER invocation."""
         freqs = self.frequencies(min_freq)
         return [(self.queries[k], f) for k, f in freqs.items() if f > 0]
+
+    # -- persistence ---------------------------------------------------------
+    def state_dict(self) -> Dict:
+        """JSON-serializable state: counters plus the query expressions as
+        text (``parse_rpq(to_text(q))`` round-trips the AST, and ``qhash``
+        is derived from the text, so keys survive the round trip)."""
+        order = list(self.counts)
+        return {
+            "half_life": self.half_life,
+            "ticks": self._ticks,
+            "qhashes": order,
+            "counts": [self.counts[k] for k in order],
+            "stamps": [int(self._stamp.get(k, 0)) for k in order],
+            "queries": [self.queries[k].to_text() for k in order],
+        }
+
+    @classmethod
+    def from_state(cls, state: Dict) -> "FrequencySketch":
+        from repro.core.rpq import parse_rpq
+
+        sk = cls(half_life=float(state["half_life"]))
+        sk._ticks = int(state["ticks"])
+        for qh, c, st, text in zip(state["qhashes"], state["counts"],
+                                   state["stamps"], state["queries"]):
+            sk.counts[qh] = float(c)
+            sk._stamp[qh] = int(st)
+            sk.queries[qh] = parse_rpq(text)
+        return sk

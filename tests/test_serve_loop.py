@@ -465,3 +465,91 @@ def test_facade_engine_routes_mutations_and_stats():
     assert s["requests"] == 20
     assert s["invocations"] >= 1
     assert "ipt_p99" in s and "latency_p99_s" in s
+
+
+# ---------------------------------------------------------------------------
+# retry hints under sustained overload
+# ---------------------------------------------------------------------------
+
+
+def test_retry_hints_monotone_in_backlog_depth():
+    freqs = {MQ1.qhash: 0.9, MQ3.qhash: 0.02}
+    q = RequestQueue(max_depth=16, hot_reserve_frac=0.75,
+                     admission_weight=lambda rpq: freqs[rpq.qhash])
+    for _ in range(4):            # warm the watershed into the reserve zone
+        assert q.submit(MQ1).accepted
+    hints = []
+    while q.depth() < q.max_depth:
+        rej = q.submit(MQ3)       # cold probe: rejected, depth unchanged
+        assert rej.reason == "cold_backpressure"
+        hints.append(rej.retry_after_s)
+        assert q.submit(MQ1).accepted
+    # a deeper backlog always quotes an equal-or-later comeback time
+    assert all(b >= a for a, b in zip(hints, hints[1:]))
+    assert hints[-1] > hints[0]
+    # ingest hints follow the same rule: the hint scales with the backlog
+    # the producer would be waiting behind
+    shallow, deep = IngestQueue(max_depth=4), IngestQueue(max_depth=32)
+    for iq in (shallow, deep):
+        while iq.submit(MutationBatch(add_edges=[(0, 1)])) is True:
+            pass
+    assert (deep.submit(MutationBatch(add_edges=[(0, 1)])).retry_after_s
+            > shallow.submit(MutationBatch(add_edges=[(0, 1)])).retry_after_s)
+
+
+def test_hot_hint_never_later_than_cold_under_sustained_overload():
+    freqs = {MQ1.qhash: 0.8, MQ3.qhash: 0.05}
+    q = RequestQueue(max_depth=8,
+                     admission_weight=lambda rpq: freqs[rpq.qhash])
+    while q.depth() < q.max_depth:
+        assert q.submit(MQ1).accepted
+    # rounds of overload with a drifting service-time estimate: every
+    # paired rejection tells the hot client to come back no later than the
+    # cold one, so retry traffic re-arrives pre-sorted by priority
+    for round_service_s in (1e-3, 5e-3, 2e-2, 1e-1):
+        q.record_service_time(round_service_s)
+        hot = q.submit(MQ1)
+        cold = q.submit(MQ3)
+        assert not hot.accepted and not cold.accepted
+        assert hot.retry_after_s <= cold.retry_after_s
+    assert q.rejected == 8
+
+
+# ---------------------------------------------------------------------------
+# loop-level split-group apply (add-after-vertex-removal conflict)
+# ---------------------------------------------------------------------------
+
+
+def test_loop_applies_split_groups_and_journals_both(tmp_path):
+    """The add-after-vertex-removal conflict must split into two groups all
+    the way through the serving loop: two journaled groups, two version
+    bumps, and arrays bitwise equal to the sequential apply."""
+    from repro.serve.snapshot import WAL_NAME, MutationJournal
+
+    g = musicbrainz_like(300, seed=31)
+    ref = g.copy()
+    loop = ServingLoop(
+        g, 4, config=ServeLoopConfig(micro_batch=8,
+                                     overlap_invocations=False,
+                                     snapshot_dir=str(tmp_path)))
+    v0 = g.version
+    batches = [
+        MutationBatch(remove_vertices=[5]),
+        MutationBatch(add_edges=[(5, 11)]),  # re-attach the tombstone
+    ]
+    for b in batches:
+        assert loop.submit_mutations(b) is True
+    loop.pump()
+    # two groups applied (a single fold would drop the re-attachment)
+    assert g.version == v0 + 2
+    assert loop.ingest.applied_batches == 2
+    assert 11 in g.neighbors(5)
+    for b in batches:
+        ref.apply_mutations(b)
+    _assert_graphs_equal(g, ref)
+    # ...and the WAL framed them as two groups, each with a merged outcome
+    out = MutationJournal(tmp_path / WAL_NAME).replay()
+    assert [seq for seq, _, _ in out] == [1, 2]
+    assert all(o["mode"] == "merged" for _, _, o in out)
+    assert len(out[0][1]) == 1 and len(out[1][1]) == 1
+    loop.stop()

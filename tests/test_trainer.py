@@ -178,3 +178,25 @@ def test_elastic_reshard_roundtrip(tmp_path, tiny_setup):
     plan = plan_reshard(params, logical, mesh, mesh)
     assert plan["total_state_bytes"] > 0
     assert plan["bytes_per_new_chip"] == plan["total_state_bytes"] / mesh.devices.size
+
+
+def test_checkpoint_async_saves_serialize_and_close_flushes(tmp_path,
+                                                            tiny_setup):
+    """Regression: back-to-back async saves used to race — the second
+    save() could overwrite the writer-thread handle while the first was
+    mid-publish, interleaving its write with keep-pruning.  Saves must
+    serialize (join-then-spawn under the lock) and close() must flush the
+    in-flight writer so every step is durably on disk."""
+    cfg, params, ostate, *_ = tiny_setup
+    mgr = CheckpointManager(tmp_path / "ck", keep=2, async_save=True)
+    for s in (1, 2, 3, 4):     # no wait() between: exercises the join path
+        mgr.save(s, {"params": params, "opt_state": ostate}, {"s": s})
+    mgr.close()
+    assert mgr.all_steps() == [3, 4]
+    restored = mgr.restore({"params": params, "opt_state": ostate})
+    assert _leaves_equal(restored["params"], params)
+    assert mgr.metadata() == {"s": 4}
+    # the manager stays usable after close(): a later save spawns fresh
+    mgr.save(5, {"params": params, "opt_state": ostate})
+    mgr.close()
+    assert mgr.all_steps() == [4, 5]

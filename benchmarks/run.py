@@ -29,6 +29,10 @@ CORE = [
     # multi-device field scaling; under run.py it inherits whatever device
     # count jax already initialised (run standalone for the 8-way mesh)
     "field_shard",
+    # batched frontier enumeration vs the DFS oracle + multi-worker serving
+    # scaling (pure numpy/threads; speedup gated at N>=20000, scaling gated
+    # standalone on >=4-core hosts)
+    "query_enum",
     # async serving loop: overlap win vs stop-the-world + warm dirty shards
     # (same device-count caveat as field_shard)
     "serve_loop",

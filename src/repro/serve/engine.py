@@ -10,7 +10,9 @@ batched executor, and repartitioning is decided by ``OnlinePolicy`` /
 ``OnlinePolicy.drift_l1`` and the first fit is the policy's explicit
 ``first_invocation_after`` bootstrap (replacing the old "huge counter"
 sentinel).  Use :class:`~repro.serve.loop.ServingLoop` directly for the
-threaded, invocation-overlapped deployment mode.
+threaded, invocation-overlapped deployment mode — including multi-worker
+serving (``ServeLoopConfig.n_workers``); the facade always drives inline
+on the calling thread, so worker count does not apply here.
 """
 from __future__ import annotations
 

@@ -4,10 +4,13 @@ The subsystem's control flow (see ``serve/README.md`` for the full
 architecture note):
 
 * **request path** — clients :meth:`ServingLoop.submit` RPQ requests into a
-  bounded :class:`~repro.serve.queueing.RequestQueue`; the worker drains
-  them in micro-batches and executes each batch through
-  ``QueryExecutor.enumerate_paths_many`` (shared per-query enumeration
-  plans) against the *current* partition vector;
+  bounded :class:`~repro.serve.queueing.RequestQueue`; executor workers
+  drain them in micro-batches and execute each batch through
+  ``QueryExecutor.enumerate_paths_many`` (batched frontier enumeration,
+  shared per-query plans) against the *current* partition vector.  With
+  ``n_workers > 1`` the N workers drain the shared queue concurrently:
+  worker 0 (the primary) keeps the whole control plane and quiesces the
+  secondaries only while it mutates (ingest patch, partition commit);
 * **ingest path** — topology deltas enter a bounded
   :class:`~repro.serve.ingest.IngestQueue`; the worker drains and coalesces
   them between invocations, applies them through
@@ -65,6 +68,7 @@ from __future__ import annotations
 
 import threading
 import time
+from contextlib import contextmanager
 from dataclasses import dataclass, replace as dc_replace
 from pathlib import Path
 from typing import Dict, List, Optional, Union
@@ -115,6 +119,12 @@ class ServeLoopConfig:
     #: how long an idle worker waits for requests before re-polling
     batch_wait_s: float = 0.005
     metrics_window: int = 2048
+    #: executor worker threads draining the request queue.  Worker 0 (the
+    #: primary) owns the whole control plane — ingest, invocation trigger
+    #: and commit, snapshots; workers 1.. only take_batch + serve.  Serving
+    #: reads are lock-free (one atomic ``ot.part`` read per micro-batch);
+    #: mutations quiesce the secondaries only for the pointer swap / patch
+    n_workers: int = 1
     # -- durability (None = crash safety off, the pre-PR6 behaviour) ----------
     #: directory for snapshots + the mutation WAL
     snapshot_dir: Optional[str] = None
@@ -192,6 +202,19 @@ class ServingLoop:
         self._ipt_ewma: Optional[float] = None
         self._stop = threading.Event()
         self._worker: Optional[threading.Thread] = None
+        # -- multi-worker serving ----------------------------------------------
+        #: secondary executor threads (worker ids 1..n_workers-1)
+        self._secondaries: List[threading.Thread] = []
+        #: quiesce gate: secondaries serve inside _serving_section();
+        #: mutators (primary only) close the gate and wait out in-flight
+        #: batches before touching graph arrays or committing a partition
+        self._gate = threading.Condition()
+        self._gate_open = True
+        self._active_serves = 0
+        #: serialises the request-side observation state shared by all
+        #: workers: the frequency sketch, admission freqs, the ipt EWMA and
+        #: the invocation trigger counters (none of which are thread-safe)
+        self._observe_lock = threading.Lock()
         # -- crash safety ------------------------------------------------------
         self._faults = self.cfg.faults
         self._journal: Optional[MutationJournal] = None
@@ -277,7 +300,10 @@ class ServingLoop:
         if self._snapshotter is None:
             raise RuntimeError("snapshot_dir not configured")
         try:
-            state = capture_serving_state(self.ot, self._applied_seq)
+            with self._observe_lock:
+                # the capture copies the sketch, which secondary workers
+                # are concurrently observing into
+                state = capture_serving_state(self.ot, self._applied_seq)
             self._snapshotter.save(state, sync=sync)
             self.metrics.record_snapshot(True)
             self._last_snapshot_t = time.monotonic()
@@ -331,6 +357,12 @@ class ServingLoop:
         self._worker = threading.Thread(
             target=self._run, name="serve-worker", daemon=True)
         self._worker.start()
+        for wid in range(1, max(1, self.cfg.n_workers)):
+            t = threading.Thread(
+                target=self._serve_run, args=(wid,),
+                name=f"serve-worker-{wid}", daemon=True)
+            t.start()
+            self._secondaries.append(t)
         return self
 
     def stop(self, drain: bool = True) -> Dict[str, float]:
@@ -340,6 +372,9 @@ class ServingLoop:
         ``invocation_failures`` and logged when they happen, so a recovered
         blip does not surface as a stale exception hours later)."""
         self._stop.set()
+        for t in self._secondaries:
+            t.join()
+        self._secondaries = []
         if self._worker is not None:
             self._worker.join()
             self._worker = None
@@ -358,6 +393,63 @@ class ServingLoop:
         if self._invocation_error is not None:
             raise self._invocation_error
         return self.stats()
+
+    def _serve_run(self, wid: int) -> None:
+        """Secondary executor worker: take_batch + serve, nothing else.
+        The control plane (ingest, invocations, snapshots) stays on the
+        primary; a mutation there closes the gate, so a secondary is either
+        idle, blocked at the gate, or serving against a stable graph."""
+        while not self._stop.is_set():
+            try:
+                batch = self.requests.take_batch(
+                    self.cfg.micro_batch, timeout=self.cfg.batch_wait_s)
+                if not batch:
+                    continue
+                with self._serving_section():
+                    self._serve_batch(batch, worker_id=wid)
+                self._worker_error = None
+            except BaseException as exc:
+                self._worker_error = exc
+                log.exception("serve worker %d round failed", wid)
+                time.sleep(self.cfg.batch_wait_s)
+
+    @contextmanager
+    def _serving_section(self):
+        """Secondary workers serve inside this: blocks while the gate is
+        closed (a mutation in progress), counts the batch as in-flight so
+        :meth:`_quiesced` can wait it out.  The gate always reopens —
+        ``_quiesced`` restores it in a ``finally`` — so this never hangs."""
+        with self._gate:
+            while not self._gate_open:
+                self._gate.wait(0.1)
+            self._active_serves += 1
+        try:
+            yield
+        finally:
+            with self._gate:
+                self._active_serves -= 1
+                self._gate.notify_all()
+
+    @contextmanager
+    def _quiesced(self):
+        """Primary-only: close the serving gate and wait for in-flight
+        secondary batches to finish, hold it closed for the body (a graph
+        patch or a partition commit), reopen on exit.  No-op while no
+        secondaries are live (single-worker loops, inline pump, post-join
+        drain) — the primary's own serving is naturally serialised."""
+        if not any(t.is_alive() for t in self._secondaries):
+            yield
+            return
+        with self._gate:
+            self._gate_open = False
+            while self._active_serves:
+                self._gate.wait(0.1)
+        try:
+            yield
+        finally:
+            with self._gate:
+                self._gate_open = True
+                self._gate.notify_all()
 
     def _run(self) -> None:
         while not self._stop.is_set():
@@ -401,32 +493,43 @@ class ServingLoop:
             self.snapshot(sync=False)
         return len(batch)
 
-    def _serve_batch(self, batch: List[ServeTicket]) -> None:
+    def _serve_batch(self, batch: List[ServeTicket],
+                     worker_id: int = 0) -> None:
         overlapped = (self._inflight is not None
                       and not self._invocation_done.is_set())
         queries = [t.query for t in batch]
         part = self.ot.part  # one read: stable for the whole micro-batch
         t0 = time.perf_counter()
+        enum_stats: Dict[str, int] = {}
         results = self.executor.enumerate_paths_many(
-            queries, max_results=self.cfg.max_results_per_query, part=part)
+            queries, max_results=self.cfg.max_results_per_query, part=part,
+            stats=enum_stats)
         dt = time.perf_counter() - t0
         for ticket, (paths, crossings) in zip(batch, results):
             ticket.complete(paths, crossings)
         self.requests.record_service_time(dt / len(batch))
         self.metrics.record_batch(
-            [t.latency_s for t in batch], [t.ipt for t in batch], overlapped)
-        self.ot.observe(queries)
-        # one snapshot per batch (O(#distinct queries)); admission reads it
-        # lock-free via atomic rebind
-        self._adm_freqs = self.ot.sketch.frequencies(self.ot.policy.min_freq)
-        self._requests_since_invocation += len(batch)
-        mean_ipt = float(np.mean([t.ipt for t in batch]))
-        self._ipt_ewma = (mean_ipt if self._ipt_ewma is None
-                          else 0.8 * self._ipt_ewma + 0.2 * mean_ipt)
+            [t.latency_s for t in batch], [t.ipt for t in batch], overlapped,
+            enum_sweeps=enum_stats.get("enum_sweeps", 0),
+            frontier_rows=enum_stats.get("frontier_rows", 0),
+            worker_id=worker_id)
+        with self._observe_lock:
+            self.ot.observe(queries)
+            # one snapshot per batch (O(#distinct queries)); admission reads
+            # it lock-free via atomic rebind
+            self._adm_freqs = self.ot.sketch.frequencies(
+                self.ot.policy.min_freq)
+            self._requests_since_invocation += len(batch)
+            mean_ipt = float(np.mean([t.ipt for t in batch]))
+            self._ipt_ewma = (mean_ipt if self._ipt_ewma is None
+                              else 0.8 * self._ipt_ewma + 0.2 * mean_ipt)
 
     # -- invocation scheduling ------------------------------------------------
     def _maybe_trigger(self) -> None:
-        reason = self.ot.poll(self._ipt_ewma)  # one tick per micro-batch
+        with self._observe_lock:
+            # one tick per micro-batch; the sketch is concurrently written
+            # by secondary workers' observe()
+            reason = self.ot.poll(self._ipt_ewma)
         if reason is None or self._pending is not None:
             return
         if self._zombies_active():
@@ -441,7 +544,9 @@ class ServingLoop:
         elif (self._requests_since_invocation
                 < self.cfg.min_requests_between_invocations):
             return
-        pending = self.ot.begin_invocation(reason)
+        with self._observe_lock:
+            # the invocation snapshot reads the sketch/workload state
+            pending = self.ot.begin_invocation(reason)
         if pending is None:
             return
         self._pending = pending
@@ -472,7 +577,8 @@ class ServingLoop:
                 # to _run's guard in threaded mode
                 self._pending = None
             wall = time.perf_counter() - t0
-            self.ot.commit_invocation(pending)
+            with self._quiesced():
+                self.ot.commit_invocation(pending)
             self.metrics.record_invocation(wall, overlapped=False)
             self._requests_since_invocation = 0
             self._note_invocation_success()
@@ -511,7 +617,11 @@ class ServingLoop:
         wall = time.perf_counter() - self._invocation_t0
         committed = False
         if self._pending is not None and self._pending.report is not None:
-            self.ot.commit_invocation(self._pending)
+            # quiesce only for the pointer swap: secondaries finish their
+            # in-flight batch, the commit rebinds ot.part (plus the shard
+            # re-deal bookkeeping), the gate reopens
+            with self._quiesced():
+                self.ot.commit_invocation(self._pending)
             self.metrics.record_invocation(wall, overlapped=True)
             committed = True
         self._pending = None
@@ -625,6 +735,12 @@ class ServingLoop:
 
     # -- ingest ---------------------------------------------------------------
     def _apply_ingest(self) -> None:
+        if self.ingest.depth() == 0:
+            return
+        with self._quiesced():
+            self._apply_ingest_locked()
+
+    def _apply_ingest_locked(self) -> None:
         applied = 0
         for merged, members in self.ingest.drain_groups():
             # WAL boundary: the group is journaled before it applies, and

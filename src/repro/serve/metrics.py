@@ -76,6 +76,14 @@ class ServeMetrics:
         self.snapshot_failures = 0
         #: WAL batches re-applied at restore (set once by ServingLoop.restore)
         self.replayed_mutations = 0
+        # -- batched enumeration (PR 7) ----------------------------------------
+        #: depth expansions executed by the frontier-batched enumerator
+        self.enum_sweeps = 0
+        #: total live (query, state, tail-vertex) rows those sweeps advanced
+        self.frontier_rows = 0
+        #: per-executor-worker completed-request counts; the snapshot folds
+        #: every worker's contribution into the one flat dict
+        self.completed_by_worker: Dict[int, int] = {}
 
     def record_invocation_failure(self) -> None:
         with self._lock:
@@ -104,16 +112,24 @@ class ServeMetrics:
             else:
                 self.snapshot_failures += 1
 
-    def record_batch(self, latencies, ipts, overlapped: bool) -> None:
+    def record_batch(self, latencies, ipts, overlapped: bool,
+                     enum_sweeps: int = 0, frontier_rows: int = 0,
+                     worker_id: int = 0) -> None:
         with self._lock:
             self.batches += 1
+            self.enum_sweeps += int(enum_sweeps)
+            self.frontier_rows += int(frontier_rows)
+            n = 0
             for lat, ipt in zip(latencies, ipts):
                 self.latency.record(lat)
                 self.request_ipt.record(float(ipt))
                 self.completed += 1
                 self.total_ipt += float(ipt)
+                n += 1
                 if overlapped:
                     self.completed_during_invocation += 1
+            self.completed_by_worker[worker_id] = (
+                self.completed_by_worker.get(worker_id, 0) + n)
 
     def record_invocation(self, wall_s: float, overlapped: bool) -> None:
         with self._lock:
@@ -168,6 +184,15 @@ class ServeMetrics:
                 "completed_during_invocation":
                     self.completed_during_invocation,
                 "partition_swaps": self.partition_swaps,
+                # -- batched enumeration ---------------------------------------
+                "enum_sweeps": self.enum_sweeps,
+                "frontier_rows": self.frontier_rows,
+                "enum_sweeps_per_batch":
+                    self.enum_sweeps / max(self.batches, 1),
+                "frontier_rows_per_batch":
+                    self.frontier_rows / max(self.batches, 1),
+                "workers_reporting": len(self.completed_by_worker),
+                "completed_by_worker": dict(self.completed_by_worker),
                 # -- health / degradation -------------------------------------
                 # "healthy" means: no unrecovered worker or invocation error
                 # and the loop is serving at its configured (base) backend

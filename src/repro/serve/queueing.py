@@ -24,7 +24,11 @@ the unweighted PR-4 queue.
 The serving loop drains requests in *micro-batches*
 (:meth:`RequestQueue.take_batch`): up to ``max_batch`` requests leave
 together so the executor can share per-query enumeration work across the
-batch (``QueryExecutor.enumerate_paths_many``)."""
+batch (``QueryExecutor.enumerate_paths_many``).  Draining is multi-worker
+safe: ``take_batch`` removes its batch atomically under the queue lock, so
+N executor workers (``ServeLoopConfig.n_workers``) pull disjoint batches
+from the one shared queue with no further coordination — each ticket is
+completed by exactly one worker."""
 from __future__ import annotations
 
 import threading
@@ -154,7 +158,8 @@ class RequestQueue:
         blocks until a request arrives.  Returns whatever is queued the
         moment it is non-empty — micro-batches fill from backlog, they do
         not wait to fill up, so an idle system serves single requests at
-        low latency.
+        low latency.  Atomic under the queue lock: concurrent workers get
+        disjoint batches.
         """
         with self._nonempty:
             if not self._items:

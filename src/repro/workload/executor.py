@@ -20,12 +20,45 @@ is then a masked sum over cut edges.  Under topology mutations
 patched by re-deriving only the states and edges whose (src-state,
 dst-label) contributions changed — the dirty set is propagated depth by
 depth from the mutated endpoints, so a small mutation batch costs
-O(affected neighbourhood), not a full DP over the graph.  Path
-materialisation (for the serving engine) is a separate bounded enumeration.
+O(affected neighbourhood), not a full DP over the graph.
+
+Path materialisation (the serving request path) is a *batched
+frontier enumeration*: instead of a per-query recursive DFS, the whole
+micro-batch's prefix tree is expanded depth by depth as vectorised segment
+gather sweeps over the CSR arrays (``row_ptr``/``dst`` — the same idiom as
+``swap_iteration`` and ``segment_spmm``).
+
+**Frontier-row layout.**  A frontier at depth ``d`` is a struct-of-arrays of
+live prefix rows ``(qid, state, tail)``: ``qid`` indexes the micro-batch's
+*distinct* queries, ``state`` is a node of that query's compiled prefix trie
+(``_EnumPlan.trans``/``is_target``; state 0 = the empty root), and ``tail``
+is the path's last vertex.  One sweep expands every row's out-edges at once
+(``np.repeat`` over CSR degree counts), advances states through the stacked
+``trans[qid, state, label]`` table (label-mask pruning against the shared
+prefix closure: a ``-1`` transition kills the row), and splits the survivors
+into *emitted* rows (target states — recorded, never extended, exactly like
+the DFS's emit-and-continue) and the next depth's frontier.  Per-depth
+``(vertex, parent_row, qid)`` level arrays make path reconstruction a
+backward gather.
+
+**DFS-order-reproducing truncation.**  The reference DFS
+(:meth:`QueryExecutor.enumerate_paths_ref`) seeds its stack with the start
+vertices in ascending id order and pushes neighbours ascending, so it pops —
+and therefore *emits* — matches in **descending lexicographic order of their
+vertex tuples** (emitted matches form an antichain under prefix order, so
+the first differing vertex always decides).  The batched engine reproduces
+that order exactly: start vertices are processed descending in
+geometrically growing chunks, each chunk's emissions are lexsorted
+descending on the padded vertex matrix, and chunks stop as soon as a
+query's ``max_results`` is reached — bit-identical paths, emission order
+and ipt to the DFS at any truncation point, while a hot truncated query
+only pays for the chunks it consumed.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -52,15 +85,29 @@ class _CountState:
 @dataclass
 class _EnumPlan:
     """Graph-independent enumeration plan for one query: the label-id
-    target strings, their prefix closure and the admissible first labels.
-    Depends only on (query, label_names) — label ids are stable across
-    topology mutations and relabels — so plans are shared across the
-    requests of a serving micro-batch and across graph versions."""
+    target strings, their prefix closure and the admissible first labels,
+    plus the prefix closure *compiled* to a trie transition table for the
+    batched frontier engine.  Depends only on (query, label_names) — label
+    ids are stable across topology mutations and relabels — so plans are
+    shared across the requests of a serving micro-batch and across graph
+    versions."""
 
     targets: frozenset       # of tuple(label_id, ...)
     prefixes: frozenset
     first_labels: np.ndarray  # unique admissible first label ids
     max_len: int
+    # -- compiled trie (batched enumeration) --------------------------------
+    #: state count incl. the root (state 0 = empty prefix)
+    n_states: int = 1
+    #: label-alphabet width the table was compiled against
+    n_labels: int = 0
+    #: (n_states, n_labels) int32 state transitions; -1 = dead (the label
+    #: string leaves the prefix closure)
+    trans: np.ndarray = field(default_factory=lambda: np.full((1, 0), -1, np.int32))
+    #: (n_states,) bool — state's prefix is a full match (emit, never extend)
+    is_target: np.ndarray = field(default_factory=lambda: np.zeros(1, bool))
+    #: owning query's qhash (keys the per-graph-version starts cache)
+    qh: str = ""
 
 
 def _count_full(g: LabelledGraph, depth1, steps, n_trie: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -91,15 +138,38 @@ class QueryExecutor:
     """
 
     #: bound on the per-query enumeration-plan cache (each plan is a few
-    #: small python sets; the bound only guards pathological workloads)
+    #: small python sets plus the compiled trie arrays; the bound only
+    #: guards pathological workloads).  Eviction is LRU: a hit moves the
+    #: plan to the back, so hot serving queries survive cache pressure.
     PLAN_CACHE_LIMIT = 256
+
+    #: start-vertex chunking of the batched enumeration: the first round
+    #: expands this many start subtrees per query, growing geometrically —
+    #: a truncated (max_results-bounded) query stops scheduling chunks as
+    #: soon as its results are in, like the DFS stops popping
+    ENUM_CHUNK0 = 32
+    ENUM_CHUNK_GROWTH = 4
 
     def __init__(self, g: LabelledGraph, star_max: int = 3, max_len: Optional[int] = None):
         self.g = g
         self.star_max = star_max
         self.max_len = max_len
         self._cache: Dict[str, _CountState] = {}
-        self._plan_cache: Dict[str, "_EnumPlan"] = {}
+        self._plan_cache: "OrderedDict[str, _EnumPlan]" = OrderedDict()
+        #: serialises plan-cache access so multi-worker serving loops can
+        #: share one executor (the enumeration sweeps themselves only read
+        #: graph arrays and are lock-free)
+        self._plan_lock = threading.Lock()
+        #: counters of the most recent batched enumeration (sweeps = depth
+        #: expansions executed, frontier_rows = total live prefix rows) —
+        #: per-call copies go to the ``stats=`` out-param for callers that
+        #: share the executor across threads
+        self.last_enum_stats: Dict[str, int] = {
+            "enum_sweeps": 0, "frontier_rows": 0}
+        #: descending start-vertex lists keyed qhash -> (graph version,
+        #: starts); a benign data race under concurrent workers at worst
+        #: recomputes one entry
+        self._starts_cache: Dict[str, Tuple[int, np.ndarray]] = {}
 
     def traversals(self, q: RPQ) -> np.ndarray:
         """(m,) float64 — number of times each directed edge is traversed
@@ -309,10 +379,15 @@ class QueryExecutor:
 
     # -- path materialisation (serving) ---------------------------------------
     def _enum_plan(self, q: RPQ) -> _EnumPlan:
-        """Cached enumeration plan (see :class:`_EnumPlan`)."""
+        """Cached enumeration plan (see :class:`_EnumPlan`), LRU-evicted."""
         qh = q.qhash
-        plan = self._plan_cache.get(qh)
-        if plan is None:
+        with self._plan_lock:
+            plan = self._plan_cache.get(qh)
+            if plan is not None:
+                # LRU, not FIFO: a hit renews the plan, so a hot serving
+                # query outlives any number of cold insertions
+                self._plan_cache.move_to_end(qh)
+                return plan
             strings = q.strings(self.max_len or 32, self.star_max)
             name_to_id = {s: i for i, s in enumerate(self.g.label_names)}
             targets = frozenset(
@@ -320,25 +395,59 @@ class QueryExecutor:
                 for st in strings if all(x in name_to_id for x in st))
             prefixes = frozenset(
                 tuple(t[:i]) for t in targets for i in range(1, len(t) + 1))
+            # compile the prefix closure into a trie: state 0 is the empty
+            # root, states 1.. the prefixes; a -1 transition is a dead row
+            states = sorted(prefixes)
+            sid = {p: i + 1 for i, p in enumerate(states)}
+            n_labels = len(name_to_id)
+            trans = np.full((len(states) + 1, max(n_labels, 1)), -1,
+                            dtype=np.int32)
+            is_target = np.zeros(len(states) + 1, dtype=bool)
+            for p in states:
+                parent = sid[p[:-1]] if len(p) > 1 else 0
+                trans[parent, p[-1]] = sid[p]
+                if p in targets:
+                    is_target[sid[p]] = True
             plan = _EnumPlan(
+                qh=qh,
                 targets=targets,
                 prefixes=prefixes,
                 first_labels=np.asarray(
                     sorted({t[0] for t in targets}), dtype=np.int64),
-                max_len=max((len(t) for t in targets), default=0))
+                max_len=max((len(t) for t in targets), default=0),
+                n_states=len(states) + 1,
+                n_labels=n_labels,
+                trans=trans,
+                is_target=is_target)
             while len(self._plan_cache) >= self.PLAN_CACHE_LIMIT:
-                self._plan_cache.pop(next(iter(self._plan_cache)))
+                self._plan_cache.popitem(last=False)
             self._plan_cache[qh] = plan
-        return plan
+            return plan
 
-    def enumerate_paths(
+    def _starts_desc(self, plan: _EnumPlan) -> np.ndarray:
+        """Descending start vertices of ``plan`` (= the DFS pop order),
+        cached per graph version; serving re-enumerates the same hot
+        queries between mutations, so the ``isin`` scan amortises away."""
+        ent = self._starts_cache.get(plan.qh)
+        if ent is not None and ent[0] == self.g.version:
+            return ent[1]
+        s = np.nonzero(np.isin(self.g.labels, plan.first_labels))[0]
+        s = s[::-1].astype(np.int64)
+        if len(self._starts_cache) >= 4 * self.PLAN_CACHE_LIMIT:
+            self._starts_cache.clear()
+        self._starts_cache[plan.qh] = (self.g.version, s)
+        return s
+
+    def enumerate_paths_ref(
         self, q: RPQ, max_results: int = 100, part: Optional[np.ndarray] = None
     ) -> Tuple[List[Tuple[int, ...]], int]:
-        """Materialise up to ``max_results`` full matches of ``q``.
+        """Reference DFS enumeration — the parity oracle for the batched
+        engine (see the module docstring for the emission-order argument).
 
-        Returns (paths, ipt_incurred). A full match is a path whose label
-        string is in str(Q). ipt counts boundary crossings on the returned
-        paths only (the serving engine's per-request accounting).
+        Materialises up to ``max_results`` full matches of ``q``; returns
+        (paths, ipt_incurred).  A full match is a path whose label string is
+        in str(Q); ipt counts boundary crossings on the returned paths only
+        (the serving engine's per-request accounting).
         """
         g = self.g
         plan = self._enum_plan(q)
@@ -357,10 +466,11 @@ class QueryExecutor:
             path, labs = stack.pop()
             if labs in targets:
                 results.append(path)
-                if part is not None:
-                    crossings += int(
-                        sum(part[a] != part[b] for a, b in zip(path, path[1:]))
-                    )
+                if part is not None and len(path) > 1:
+                    # one gather + compare per emitted path, not a python
+                    # sum over consecutive pairs
+                    pv = np.take(part, path)
+                    crossings += int(np.sum(pv[1:] != pv[:-1]))
                 continue
             if len(labs) >= max_len:
                 continue
@@ -371,35 +481,206 @@ class QueryExecutor:
                     stack.append((path + (int(u),), nl))
         return results, crossings
 
+    def enumerate_paths(
+        self, q: RPQ, max_results: int = 100, part: Optional[np.ndarray] = None
+    ) -> Tuple[List[Tuple[int, ...]], int]:
+        """Materialise up to ``max_results`` full matches of ``q`` via the
+        batched frontier engine — bit-identical (paths, emission order,
+        ipt) to :meth:`enumerate_paths_ref`."""
+        return self._enumerate_batch([self._enum_plan(q)], max_results,
+                                     part)[0]
+
     def enumerate_paths_many(
         self,
         queries: Sequence[RPQ],
         max_results: int = 100,
         part: Optional[np.ndarray] = None,
+        stats: Optional[Dict[str, int]] = None,
     ) -> List[Tuple[List[Tuple[int, ...]], int]]:
         """Batched :meth:`enumerate_paths` over one serving micro-batch.
 
-        The trie-expansion/plan work (``str(Q)`` strings, prefix closure,
-        start-vertex scan, DFS) is shared across the batch: each *distinct*
-        query is enumerated once and its result fanned out to every request
-        position that asked for it — the common serving case of a hot query
-        repeated within a micro-batch pays one enumeration.  Results are
-        positionally aligned with ``queries`` and identical to calling
-        :meth:`enumerate_paths` per query.
+        Every *distinct* query contributes rows to one shared frontier, so
+        a single sweep per depth advances every live prefix of every query
+        in the batch; duplicates of a hot query pay one enumeration and fan
+        out to their request positions.  Results are positionally aligned
+        with ``queries`` and bit-identical to calling
+        :meth:`enumerate_paths_ref` per query.  ``stats``, when given, is
+        filled with this call's ``enum_sweeps``/``frontier_rows``.
         """
         out: List[Optional[Tuple[List[Tuple[int, ...]], int]]] = \
             [None] * len(queries)
         by_hash: Dict[str, List[int]] = {}
         for i, q in enumerate(queries):
             by_hash.setdefault(q.qhash, []).append(i)
-        for idxs in by_hash.values():
-            paths, ipt = self.enumerate_paths(
-                queries[idxs[0]], max_results=max_results, part=part)
+        distinct = [queries[idxs[0]] for idxs in by_hash.values()]
+        plans = [self._enum_plan(q) for q in distinct]
+        results = self._enumerate_batch(plans, max_results, part, stats)
+        for idxs, (paths, ipt) in zip(by_hash.values(), results):
             out[idxs[0]] = (paths, ipt)
             for i in idxs[1:]:
                 # fresh list per position: duplicate requests must not
                 # alias one mutable result (the path tuples are immutable)
                 out[i] = (list(paths), ipt)
+        return out
+
+    def _enumerate_batch(
+        self,
+        plans: List[_EnumPlan],
+        max_results: int,
+        part: Optional[np.ndarray],
+        stats: Optional[Dict[str, int]] = None,
+    ) -> List[Tuple[List[Tuple[int, ...]], int]]:
+        """Frontier-batched enumeration over distinct plans (module doc:
+        frontier-row layout, truncation rule)."""
+        g = self.g
+        nq = len(plans)
+        out: List[Optional[Tuple[List[Tuple[int, ...]], int]]] = [None] * nq
+        sweeps = 0
+        frontier_rows = 0
+        live = [i for i, p in enumerate(plans)
+                if max_results > 0 and p.max_len > 0]
+        for i in range(nq):
+            if i not in live:
+                out[i] = ([], 0)
+        if live:
+            S = max(plans[i].n_states for i in live)
+            L = max(plans[i].trans.shape[1] for i in live)
+            trans = np.full((nq, S, L), -1, dtype=np.int32)
+            is_tgt = np.zeros((nq, S), dtype=bool)
+            for i in live:
+                p = plans[i]
+                trans[i, :p.n_states, :p.trans.shape[1]] = p.trans
+                is_tgt[i, :p.n_states] = p.is_target
+            labels = np.ascontiguousarray(g.labels, dtype=np.int64)
+            row_ptr = np.ascontiguousarray(g.row_ptr, dtype=np.int64)
+            dst = np.ascontiguousarray(g.dst, dtype=np.int64)
+            # start vertices per query, descending (= the DFS pop order)
+            starts = {i: self._starts_desc(plans[i]) for i in live}
+            cursor = {i: 0 for i in live}
+            acc: Dict[int, List[Tuple[np.ndarray, np.ndarray]]] = \
+                {i: [] for i in live}
+            acc_n = {i: 0 for i in live}
+            done: set = set()
+            chunk = self.ENUM_CHUNK0
+            while len(done) < len(live):
+                qid_parts, v_parts, round_q = [], [], []
+                for i in live:
+                    if i in done:
+                        continue
+                    s = starts[i][cursor[i]: cursor[i] + chunk]
+                    cursor[i] += s.size
+                    if cursor[i] >= starts[i].size:
+                        done.add(i)  # last chunk; results land this round
+                    if s.size:
+                        qid_parts.append(np.full(s.size, i, dtype=np.int64))
+                        v_parts.append(s)
+                        round_q.append(i)
+                if not v_parts:
+                    break
+                qid0 = np.concatenate(qid_parts)
+                v0 = np.concatenate(v_parts)
+                lab0 = labels[v0]
+                st0 = trans[qid0, 0, np.minimum(lab0, L - 1)].astype(np.int64)
+                st0[lab0 >= L] = -1
+                keep0 = st0 >= 0
+                f_qid, f_state, f_tail = qid0[keep0], st0[keep0], v0[keep0]
+                sweeps += 1
+                frontier_rows += f_tail.size
+                # per-depth levels: (vertex, parent row at prev depth, qid)
+                levels = [(f_tail, np.full(f_tail.size, -1, np.int64), f_qid)]
+                emits: List[Tuple[int, np.ndarray]] = []
+                tgt = is_tgt[f_qid, f_state]
+                if tgt.any():
+                    emits.append((1, np.nonzero(tgt)[0]))
+                ext = ~tgt
+                f_row = np.nonzero(ext)[0]
+                f_qid, f_state, f_tail = f_qid[ext], f_state[ext], f_tail[ext]
+                depth = 1
+                max_depth = max(plans[i].max_len for i in round_q)
+                while f_tail.size and depth < max_depth:
+                    base = row_ptr[f_tail]
+                    cnts = row_ptr[f_tail + 1] - base
+                    total = int(cnts.sum())
+                    if total == 0:
+                        break
+                    rep = np.repeat(np.arange(f_tail.size), cnts)
+                    # edge index = per-parent CSR base + within-parent
+                    # offset, folded into one gather over parent rows
+                    adj = base + cnts - np.cumsum(cnts)
+                    eidx = np.arange(total, dtype=np.int64) + adj[rep]
+                    nbr = dst[eidx]
+                    nlab = labels[nbr]
+                    nstate = trans[f_qid[rep], f_state[rep],
+                                   np.minimum(nlab, L - 1)].astype(np.int64)
+                    nstate[nlab >= L] = -1
+                    keep = nstate >= 0
+                    rep, nbr, nstate = rep[keep], nbr[keep], nstate[keep]
+                    nqid = f_qid[rep]
+                    nprev = f_row[rep]
+                    depth += 1
+                    sweeps += 1
+                    frontier_rows += nbr.size
+                    levels.append((nbr, nprev, nqid))
+                    tgt = is_tgt[nqid, nstate]
+                    if tgt.any():
+                        emits.append((depth, np.nonzero(tgt)[0]))
+                    ext = ~tgt
+                    f_row = np.nonzero(ext)[0]
+                    f_qid, f_state, f_tail = nqid[ext], nstate[ext], nbr[ext]
+                # materialise this round's emissions: backward gather per
+                # depth, then per-query descending lexsort = DFS order
+                per_q: Dict[int, List[Tuple[np.ndarray, int]]] = {}
+                for d, rows in emits:
+                    mat = np.empty((rows.size, d), dtype=np.int64)
+                    cur = rows
+                    for col in range(d - 1, -1, -1):
+                        verts, prev, _ = levels[col]
+                        mat[:, col] = verts[cur]
+                        cur = prev[cur]
+                    qv = levels[d - 1][2][rows]
+                    for i in np.unique(qv):
+                        sel = qv == i
+                        per_q.setdefault(int(i), []).append((mat[sel], d))
+                for i, pieces in per_q.items():
+                    W = plans[i].max_len
+                    tot = sum(m.shape[0] for m, _ in pieces)
+                    padded = np.full((tot, W), -1, dtype=np.int64)
+                    lens = np.empty(tot, dtype=np.int64)
+                    o = 0
+                    for m, d in pieces:
+                        padded[o:o + m.shape[0], :d] = m
+                        lens[o:o + m.shape[0]] = d
+                        o += m.shape[0]
+                    # emitted matches are an antichain under prefix order,
+                    # so the -1 padding never decides a comparison
+                    order = np.lexsort(
+                        [-padded[:, c] for c in range(W - 1, -1, -1)])
+                    acc[i].append((padded[order], lens[order]))
+                    acc_n[i] += tot
+                    if acc_n[i] >= max_results:
+                        done.add(i)
+                chunk *= self.ENUM_CHUNK_GROWTH
+            for i in live:
+                if not acc[i]:
+                    out[i] = ([], 0)
+                    continue
+                padded = np.concatenate([m for m, _ in acc[i]], axis=0)
+                lens = np.concatenate([l for _, l in acc[i]])
+                if padded.shape[0] > max_results:
+                    padded, lens = padded[:max_results], lens[:max_results]
+                crossings = 0
+                if part is not None and padded.shape[1] >= 2:
+                    pv = np.asarray(part)[np.clip(padded, 0, None)]
+                    valid = (np.arange(1, padded.shape[1])[None, :]
+                             <= (lens - 1)[:, None])
+                    crossings = int(((pv[:, 1:] != pv[:, :-1]) & valid).sum())
+                paths = [tuple(map(int, padded[r, :lens[r]]))
+                         for r in range(padded.shape[0])]
+                out[i] = (paths, crossings)
+        self.last_enum_stats = {"enum_sweeps": sweeps,
+                                "frontier_rows": frontier_rows}
+        if stats is not None:
+            stats.update(self.last_enum_stats)
         return out
 
 

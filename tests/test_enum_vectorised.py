@@ -1,0 +1,316 @@
+"""Parity suite for the batched frontier path enumerator (PR 7).
+
+``QueryExecutor.enumerate_paths`` / ``enumerate_paths_many`` must be
+bit-identical — paths, emission order, ipt — to the recursive DFS oracle
+``enumerate_paths_ref`` on every graph, query and truncation boundary, and
+the multi-worker serving loop must return the same per-request results as
+the single-worker one.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.rpq import parse_rpq
+from repro.graphs.generators import (
+    musicbrainz_like,
+    paper_example_graph,
+    power_law_labelled,
+    provgen_like,
+)
+from repro.graphs.graph import MutationBatch
+from repro.workload.executor import QueryExecutor
+
+MB_QUERIES = [
+    "Area.Artist.(Artist|Label).Area",
+    "Artist.Credit.(Track|Recording).Credit.Artist",
+    "Artist.Credit.Track.Medium",
+]
+PG_QUERIES = [
+    "Entity.(Entity)*.Entity",
+    "Agent.Activity.Entity.Entity.Activity.Agent",
+    "(Entity)*.Activity.Entity",
+    "Entity.Activity.(Agent)*",
+]
+# generic shapes over the L0..L{k-1} alphabet of power_law_labelled
+PL_QUERIES = [
+    "L0.L1",
+    "L1.(L0|L2).L1",
+    "(L0)*.L1",
+    "L2.(L1)*",
+    "L0.(L1|L2|L3).(L0|L1).L2",
+    "(L3)*",
+]
+
+
+def _assert_parity(ex, q, max_results, part):
+    ref = ex.enumerate_paths_ref(q, max_results, part)
+    got = ex.enumerate_paths(q, max_results, part)
+    assert got == ref, (q.to_text(), max_results)
+
+
+@pytest.mark.parametrize("gname", ["mb", "pg", "pl"])
+def test_parity_random_graphs(gname):
+    rng = np.random.default_rng(0)
+    if gname == "mb":
+        g, texts = musicbrainz_like(1500, seed=5), MB_QUERIES
+    elif gname == "pg":
+        g, texts = provgen_like(1500, seed=5), PG_QUERIES
+    else:
+        g, texts = power_law_labelled(800, n_labels=4, seed=5), PL_QUERIES
+    ex = QueryExecutor(g)
+    part = rng.integers(0, 8, g.n)
+    for text in texts:
+        q = parse_rpq(text)
+        for mr in (1, 7, 32, 10 ** 9):
+            _assert_parity(ex, q, mr, part)
+
+
+def test_parity_paper_graph():
+    g = paper_example_graph()
+    ex = QueryExecutor(g)
+    part = np.zeros(g.n, dtype=np.int64)
+    part[g.n // 2:] = 1
+    for text in ("a.(b|c).(c|d)", "(c|a).c.a"):
+        _assert_parity(ex, parse_rpq(text), 100, part)
+
+
+def test_truncation_boundaries():
+    g = power_law_labelled(600, n_labels=3, seed=1)
+    ex = QueryExecutor(g)
+    part = np.random.default_rng(1).integers(0, 4, g.n)
+    q = parse_rpq("L0.(L1|L2).L0")
+    full, _ = ex.enumerate_paths_ref(q, 10 ** 9, part)
+    total = len(full)
+    assert total > 2, "fixture query must have several matches"
+    for mr in (0, 1, 2, total - 1, total, total + 1,
+               QueryExecutor.ENUM_CHUNK0 - 1, QueryExecutor.ENUM_CHUNK0,
+               QueryExecutor.ENUM_CHUNK0 + 1):
+        _assert_parity(ex, q, mr, part)
+    # a truncated result is exactly the prefix of the full enumeration
+    got, _ = ex.enumerate_paths(q, min(5, total), part)
+    assert got == full[:min(5, total)]
+
+
+def test_kleene_star_at_star_max():
+    g = power_law_labelled(400, n_labels=3, seed=2)
+    for star_max in (1, 2, 3, 4):
+        ex = QueryExecutor(g, star_max=star_max)
+        part = np.random.default_rng(2).integers(0, 4, g.n)
+        for text in ("(L0)*.L1", "L1.(L2)*", "(L0)*"):
+            q = parse_rpq(text)
+            _assert_parity(ex, q, 10 ** 9, part)
+            paths, _ = ex.enumerate_paths(q, 10 ** 9, part)
+            # star bounded at star_max: no match may exceed the plan width
+            max_len = max((len(t) for t in ex._enum_plan(q).targets),
+                          default=0)
+            assert all(len(p) <= max_len for p in paths)
+
+
+def test_many_matches_per_query_and_order():
+    g = musicbrainz_like(1200, seed=7)
+    ex = QueryExecutor(g)
+    part = np.random.default_rng(7).integers(0, 8, g.n)
+    queries = [parse_rpq(t) for t in MB_QUERIES]
+    outs = ex.enumerate_paths_many(queries, 32, part)
+    for q, out in zip(queries, outs):
+        assert out == ex.enumerate_paths_ref(q, 32, part)
+
+
+def test_duplicate_query_fanout_does_not_alias():
+    g = musicbrainz_like(800, seed=3)
+    ex = QueryExecutor(g)
+    part = np.random.default_rng(3).integers(0, 4, g.n)
+    q = parse_rpq(MB_QUERIES[0])
+    batch = [q, parse_rpq(MB_QUERIES[1]), q, q]
+    outs = ex.enumerate_paths_many(batch, 16, part)
+    assert outs[0] == outs[2] == outs[3]
+    # each duplicate position owns its list: serving tickets may consume
+    # (mutate) their result without corrupting their siblings'
+    ref = list(outs[2][0])
+    outs[0][0].append(("sentinel",))
+    assert outs[2][0] == ref and outs[3][0] == ref
+
+
+def test_enum_counters_surface():
+    g = musicbrainz_like(800, seed=4)
+    ex = QueryExecutor(g)
+    stats = {}
+    ex.enumerate_paths_many([parse_rpq(t) for t in MB_QUERIES], 32,
+                            np.zeros(g.n, np.int64), stats=stats)
+    assert stats["enum_sweeps"] > 0
+    assert stats["frontier_rows"] > 0
+    assert ex.last_enum_stats == stats
+
+
+def test_parity_survives_mutations():
+    """The per-graph-version caches (starts, traversal DP) must follow
+    topology and label mutations."""
+    g = power_law_labelled(500, n_labels=3, seed=6)
+    ex = QueryExecutor(g)
+    part = np.random.default_rng(6).integers(0, 4, g.n)
+    q = parse_rpq("L0.(L1|L2).L0")
+    _assert_parity(ex, q, 10 ** 9, part)
+    before = ex.enumerate_paths(q, 10 ** 9, part)
+    rng = np.random.default_rng(8)
+    edges = np.stack([rng.integers(0, g.n, 12), rng.integers(0, g.n, 12)],
+                     axis=1)
+    g.apply_mutations(MutationBatch(
+        add_edges=edges, relabel=[(int(rng.integers(0, g.n)), 0)]))
+    _assert_parity(ex, q, 10 ** 9, part)
+    _assert_parity(ex, q, 5, part)
+
+
+def test_plan_cache_is_lru():
+    """A repeatedly-hit plan outlives PLAN_CACHE_LIMIT cold insertions."""
+    g = power_law_labelled(200, n_labels=4, seed=9)
+    ex = QueryExecutor(g)
+    hot = parse_rpq("L0.L1")
+    hot_plan = ex._enum_plan(hot)
+    for i in range(ex.PLAN_CACHE_LIMIT + 16):
+        # alternate cold inserts with hot hits: FIFO would evict the hot
+        # plan once PLAN_CACHE_LIMIT cold queries passed through, LRU keeps
+        # renewing it
+        ex._enum_plan(parse_rpq("L0." * (i // 4 + 1) + f"L{i % 4}"))
+        assert ex._enum_plan(hot) is hot_plan
+    assert len(ex._plan_cache) <= ex.PLAN_CACHE_LIMIT
+
+
+def test_plan_cache_evicts_cold():
+    g = power_law_labelled(200, n_labels=4, seed=9)
+    ex = QueryExecutor(g)
+    cold = parse_rpq("L3.L3")
+    cold_plan = ex._enum_plan(cold)
+    for i in range(ex.PLAN_CACHE_LIMIT + 1):
+        ex._enum_plan(parse_rpq("L0." * (i // 4 + 1) + f"L{i % 4}"))
+    assert ex._enum_plan(cold) is not cold_plan
+
+
+def test_executor_thread_safety_smoke():
+    """Concurrent enumerate_paths_many over one executor: the plan cache is
+    locked, the sweeps read-only — results must equal the serial oracle."""
+    g = musicbrainz_like(800, seed=11)
+    ex = QueryExecutor(g)
+    part = np.random.default_rng(11).integers(0, 4, g.n)
+    queries = [parse_rpq(t) for t in MB_QUERIES]
+    expected = [ex.enumerate_paths_ref(q, 16, part) for q in queries]
+    errors = []
+
+    def worker():
+        try:
+            for _ in range(20):
+                outs = ex.enumerate_paths_many(queries, 16, part)
+                assert outs == expected
+        except BaseException as exc:  # pragma: no cover
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+
+
+def test_multi_worker_determinism():
+    """Same request stream, no invocations/mutations: per-ticket results
+    are identical whatever the worker count."""
+    from repro.core.online import OnlinePolicy
+    from repro.serve.loop import ServeLoopConfig, ServingLoop
+
+    queries = [parse_rpq(MB_QUERIES[i % 3]) for i in range(120)]
+    ref = None
+    for n_workers in (1, 4):
+        loop = ServingLoop(
+            musicbrainz_like(1000, seed=13), k=4,
+            policy=OnlinePolicy(cadence=10 ** 9,
+                                bootstrap_after_ticks=10 ** 9),
+            config=ServeLoopConfig(n_workers=n_workers, micro_batch=8),
+        ).start()
+        tickets = [loop.submit(q) for q in queries]
+        assert all(t.accepted for t in tickets)
+        for t in tickets:
+            assert t.wait(30)
+        stats = loop.stop()
+        results = [(t.paths, t.ipt) for t in tickets]
+        if ref is None:
+            ref = results
+        else:
+            assert results == ref
+        assert stats["completed"] == len(queries)
+        if n_workers > 1:
+            assert stats["workers_reporting"] >= 1
+        assert stats["enum_sweeps"] > 0
+
+
+def test_multi_worker_with_mutations_and_commit():
+    """Secondaries keep serving across ingest patches and an invocation
+    commit; every ticket completes and the loop stays healthy."""
+    from repro.core.online import OnlinePolicy
+    from repro.serve.loop import ServeLoopConfig, ServingLoop
+
+    g = musicbrainz_like(800, seed=17)
+    loop = ServingLoop(
+        g, k=4,
+        policy=OnlinePolicy(cadence=5, min_interval=0,
+                            bootstrap_after_ticks=0),
+        config=ServeLoopConfig(n_workers=3, micro_batch=8),
+    ).start()
+    rng = np.random.default_rng(17)
+    tickets = []
+    for i in range(300):
+        t = loop.submit(parse_rpq(MB_QUERIES[int(rng.integers(0, 3))]))
+        if t.accepted:
+            tickets.append(t)
+        if i % 40 == 0:
+            u, v = int(rng.integers(0, g.n)), int(rng.integers(0, g.n))
+            loop.submit_mutations(MutationBatch(add_edges=[(u, v)]))
+    for t in tickets:
+        assert t.wait(60)
+    stats = loop.stop()
+    assert stats["invocations"] >= 1
+    assert stats["healthy"] == 1
+    assert stats["completed"] == len(tickets)
+
+
+# -- hypothesis twin ----------------------------------------------------------
+# Guarded (not importorskip at module level) so the deterministic parity
+# suite above still runs where hypothesis is absent.
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @st.composite
+    def _graph_and_query(draw):
+        n_labels = draw(st.integers(min_value=1, max_value=5))
+        n = draw(st.integers(min_value=2, max_value=60))
+        seed = draw(st.integers(min_value=0, max_value=2 ** 16))
+        depth = draw(st.integers(min_value=1, max_value=4))
+        parts = []
+        for _ in range(depth):
+            kind = draw(st.sampled_from(["label", "union", "star"]))
+            a = draw(st.integers(min_value=0, max_value=n_labels - 1))
+            b = draw(st.integers(min_value=0, max_value=n_labels - 1))
+            if kind == "label":
+                parts.append(f"L{a}")
+            elif kind == "union":
+                parts.append(f"(L{a}|L{b})")
+            else:
+                parts.append(f"(L{a})*")
+        return n, n_labels, seed, ".".join(parts)
+
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(_graph_and_query(), st.integers(min_value=0, max_value=64))
+    def test_hypothesis_parity_random_alphabets(gq, max_results):
+        n, n_labels, seed, text = gq
+        g = power_law_labelled(n, n_labels=n_labels, avg_degree=4.0,
+                               seed=seed)
+        ex = QueryExecutor(g)
+        part = np.random.default_rng(seed).integers(0, 3, g.n)
+        q = parse_rpq(text)
+        assert ex.enumerate_paths(q, max_results, part) == \
+            ex.enumerate_paths_ref(q, max_results, part)

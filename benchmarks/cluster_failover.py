@@ -1,0 +1,257 @@
+"""Replicated cluster serving: catch-up replay, failover, degraded reads.
+
+Acceptance benchmark for the replication layer (``repro.serve.replication``
+/ ``repro.serve.cluster``).  Three claims, measured on an inline-driven
+cluster (one primary ``ServingLoop`` + WAL-shipped followers):
+
+* **follower catch-up replay** — a follower cut off behind a link
+  partition re-applies the missed WAL tail through the hub's journal-backed
+  tail resync; that replay must not take materially longer than the
+  primary's live apply of the same batches did.  Asserted (standalone
+  runs): catch-up wall <= 4x the live apply wall.
+* **failover-to-first-answer** — from the instant the primary dies to the
+  first successfully served read off the promoted follower: heartbeat
+  timeout + promotion (catch-up, epoch-opening commit, device warm, fresh
+  snapshot) + one routed read.  Asserted (standalone runs): bounded by the
+  heartbeat timeout plus a fixed promotion budget.
+* **degraded read throughput** — with one follower crashed, reads routed
+  to it redirect to the primary; cluster read throughput must hold >= 0.5x
+  the all-replicas-healthy rate on the same stream.  Asserted (standalone
+  runs).
+
+The drill is the timed twin of ``tests/test_cluster.py``'s bitwise one:
+the same crash -> promote -> serve sequence, with wall clocks on each leg.
+Scale via ``REPRO_BENCH_N`` (default 20000).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import tempfile
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+_STANDALONE = "jax" not in sys.modules
+
+from benchmarks.common import K, Report, workload_for
+from repro.core.online import OnlinePolicy
+from repro.core.rpq import parse_rpq
+from repro.core.taper import TaperConfig
+from repro.graphs.generators import musicbrainz_like
+from repro.serve import (
+    ClusterConfig,
+    ClusterCoordinator,
+    ServeLoopConfig,
+    ServingLoop,
+)
+from repro.serve.faults import FaultInjector, SITE_LINK_PARTITION
+from repro.workload.stream import GraphMutationStream, WorkloadStream
+
+BENCH_N = int(os.environ.get("REPRO_BENCH_N", "20000"))
+#: read budget per throughput phase
+REQUESTS = int(os.environ.get("REPRO_CLUSTER_REQUESTS", "96"))
+#: mutation batches in the catch-up tail
+TAIL_BATCHES = int(os.environ.get("REPRO_CLUSTER_TAIL", "40"))
+HB_TIMEOUT_S = 0.2
+#: promotion budget on top of heartbeat detection (catch-up + epoch-open
+#: commit + device warm + fresh snapshot + one read)
+PROMOTION_BUDGET_S = 5.0
+MICRO_BATCH = 16
+
+
+def _policy(quiet: bool = False) -> OnlinePolicy:
+    """``quiet=True`` freezes invocations after the bootstrap one, so the
+    throughput phases measure the read path, not invocation scheduling."""
+    if quiet:
+        return OnlinePolicy(bootstrap_after_ticks=0, cadence=10 ** 9,
+                            min_interval=10 ** 9, dirty_fraction=1.0,
+                            drift_l1=9e9, ipt_regression=9e9)
+    return OnlinePolicy(bootstrap_after_ticks=0, cadence=8, min_interval=1,
+                        dirty_fraction=0.05, drift_l1=9e9,
+                        ipt_regression=9e9)
+
+
+def _cluster(n: int, tmp: str, n_followers: int = 2,
+             faults: Optional[FaultInjector] = None,
+             quiet: bool = False) -> ClusterCoordinator:
+    g = musicbrainz_like(n, avg_degree=6.0, seed=17)
+    primary = ServingLoop(
+        g, K, taper_config=TaperConfig(max_iterations=3),
+        policy=_policy(quiet),
+        config=ServeLoopConfig(micro_batch=MICRO_BATCH,
+                               overlap_invocations=False,
+                               snapshot_dir=tmp, faults=faults))
+    return ClusterCoordinator(
+        primary,
+        config=ClusterConfig(n_followers=n_followers,
+                             heartbeat_timeout_s=HB_TIMEOUT_S,
+                             faults=faults),
+        policy=_policy(quiet), taper_config=TaperConfig(max_iterations=3))
+
+
+def _serve_reads(coord: ClusterCoordinator, budget: int, seed: int,
+                 queries: Optional[List] = None) -> Tuple[float, int]:
+    """Inline-drive ``budget`` routed reads; returns (wall_s, served)."""
+    ws = WorkloadStream(
+        queries if queries is not None
+        else [q for q, _ in workload_for("musicbrainz")],
+        period=6.0, seed=seed)
+    served = 0
+    t0 = time.perf_counter()
+    while served < budget:
+        ws.advance(0.1)
+        batch = ws.sample(min(8, budget - served))
+        coord.serve(batch, cls="hot")
+        served += len(batch)
+    return time.perf_counter() - t0, served
+
+
+def _mutation_tail(coord: ClusterCoordinator, n_batches: int):
+    g = coord.primary.g
+    scratch = g.copy()
+    muts = GraphMutationStream(
+        mode="mixed", seed=7,
+        vertices_per_tick=max(2, g.n // 4000),
+        edges_per_tick=max(8, g.m // 4000))
+    out = []
+    for _ in range(n_batches):
+        b = muts.next_batch(scratch)
+        scratch.apply_mutations(b)
+        out.append(b)
+    return out
+
+
+def run(report: Optional[Report] = None, n: int = BENCH_N) -> Report:
+    report = report or Report()
+    tmp = tempfile.mkdtemp(prefix="repro_cluster_")
+    try:
+        # -- phase 1: follower catch-up replay <= 4x live apply --------------
+        fi = FaultInjector()
+        coord = _cluster(n, os.path.join(tmp, "catchup"), n_followers=1,
+                         faults=fi, quiet=True)
+        _serve_reads(coord, 16, seed=1)          # bootstrap invocation fires
+        coord.pump()
+        f = coord.followers[1]
+        f.catch_up()
+        fi.arm(f"{SITE_LINK_PARTITION}:replica-1")
+        tail = _mutation_tail(coord, TAIL_BATCHES)
+        t0 = time.perf_counter()
+        for b in tail:
+            assert coord.submit_mutations(b) is True
+            coord.pump()
+        live_apply_s = time.perf_counter() - t0
+        behind = f.seq_lag
+        assert behind >= TAIL_BATCHES, "follower was not actually cut off"
+        fi.disarm(f"{SITE_LINK_PARTITION}:replica-1")
+        t0 = time.perf_counter()
+        while f.seq_lag > 0:
+            f.catch_up()
+        catchup_s = time.perf_counter() - t0
+        st = f.stats()
+        assert st["tail_resyncs"] >= 1 and st["full_resyncs"] == 0, \
+            "catch-up went through a snapshot re-fetch, not tail replay"
+        report.add(
+            "cluster/catchup_replay", catchup_s,
+            f"batches={behind} live_apply_s={live_apply_s:.3f} "
+            f"catchup_s={catchup_s:.3f} "
+            f"rate={behind / max(catchup_s, 1e-9):.0f}bat/s target<=4x_live",
+            metrics={"batches": behind, "live_apply_s": live_apply_s,
+                     "catchup_s": catchup_s})
+        if _STANDALONE:
+            assert catchup_s <= 4.0 * live_apply_s + 0.25, (
+                f"follower catch-up took {catchup_s:.3f}s for a tail the "
+                f"primary applied live in {live_apply_s:.3f}s")
+        coord.stop()
+
+        # -- phase 2: failover-to-first-answer --------------------------------
+        coord = _cluster(n, os.path.join(tmp, "failover"), n_followers=2)
+        _serve_reads(coord, 32, seed=2)
+        for b in _mutation_tail(coord, 8):
+            coord.submit_mutations(b)
+            coord.pump()
+        q0 = workload_for("musicbrainz")[0][0]
+        t0 = time.perf_counter()
+        coord.crash_primary()
+        while coord.failovers == 0:
+            coord.pump()
+            time.sleep(0.01)
+        detect_promote_s = time.perf_counter() - t0
+        res = coord.serve([q0], cls="hot")
+        first_answer_s = time.perf_counter() - t0
+        assert len(res) == 1 and res[0] is not None
+        assert coord.stats()["cluster_epoch"] == 2
+        report.add(
+            "cluster/failover_first_answer", first_answer_s,
+            f"hb_timeout_s={HB_TIMEOUT_S} "
+            f"detect+promote_s={detect_promote_s:.3f} "
+            f"first_answer_s={first_answer_s:.3f} epoch=2 "
+            f"target<=hb+{PROMOTION_BUDGET_S:.0f}s",
+            metrics={"detect_promote_s": detect_promote_s,
+                     "first_answer_s": first_answer_s,
+                     "hb_timeout_s": HB_TIMEOUT_S})
+        if _STANDALONE:
+            assert first_answer_s <= HB_TIMEOUT_S + PROMOTION_BUDGET_S, (
+                f"failover-to-first-answer took {first_answer_s:.3f}s "
+                f"(budget {HB_TIMEOUT_S + PROMOTION_BUDGET_S:.2f}s)")
+        coord.stop()
+
+        # -- phase 3: read throughput with one crashed replica ----------------
+        coord = _cluster(n, os.path.join(tmp, "degraded"), n_followers=2,
+                         quiet=True)
+        _serve_reads(coord, 16, seed=3)          # warm: bootstrap + caches
+        # TAPER clusters the core workload's start labels together, so the
+        # stock mix can majority-route every query to one slot.  Extend the
+        # mix with reads starting from follower-owned labels so the healthy
+        # phase spreads across replicas and the crash actually reroutes work.
+        g = coord.primary.g
+        own = coord.router.owners()
+        mix = [q for q, _ in workload_for("musicbrainz")]
+        for lab in range(g.n_labels):
+            vs = np.nonzero(g.labels == lab)[0]
+            if vs.size == 0:
+                continue
+            slot = int(np.argmax(np.bincount(own[vs],
+                                             minlength=coord.n_replicas)))
+            if slot != coord.primary_slot:
+                mix.append(parse_rpq(
+                    f"{g.label_names[lab]}.{g.label_names[lab]}"))
+        healthy_wall, healthy_served = _serve_reads(coord, REQUESTS, seed=4,
+                                                    queries=mix)
+        healthy_qps = healthy_served / max(healthy_wall, 1e-9)
+        # crash the follower carrying the most routed reads, so the degraded
+        # phase exercises the dead-redirect path
+        by_slot = dict(coord.router.routed_by_slot)
+        victim = max(coord.followers, key=lambda s: by_slot.get(s, 0))
+        assert by_slot.get(victim, 0) > 0, \
+            f"owner routing sent no reads to any follower ({by_slot})"
+        coord.followers[victim].crash()
+        hurt_wall, hurt_served = _serve_reads(coord, REQUESTS, seed=5,
+                                              queries=mix)
+        hurt_qps = hurt_served / max(hurt_wall, 1e-9)
+        ratio = hurt_qps / max(healthy_qps, 1e-9)
+        rst = coord.router.stats()
+        report.add(
+            "cluster/degraded_reads", hurt_wall / max(hurt_served, 1),
+            f"healthy_qps={healthy_qps:.1f} one_down_qps={hurt_qps:.1f} "
+            f"ratio={ratio:.2f}x target>=0.5x "
+            f"dead_redirects={rst['dead_redirects']}",
+            metrics={"healthy_qps": healthy_qps, "one_down_qps": hurt_qps,
+                     "ratio": ratio,
+                     "dead_redirects": rst["dead_redirects"]})
+        if _STANDALONE:
+            assert rst["dead_redirects"] >= 1, \
+                "no read ever routed to the crashed replica (vacuous run)"
+            assert ratio >= 0.5, (
+                f"read throughput fell to {ratio:.2f}x of healthy with one "
+                "crashed replica (floor: 0.5x)")
+        coord.stop()
+        return report
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run().emit()

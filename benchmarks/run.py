@@ -38,6 +38,9 @@ CORE = [
     "serve_loop",
     # crash-safe serving: snapshot cost, WAL replay catch-up, degraded floor
     "recovery",
+    # replicated cluster: follower catch-up replay, fenced failover to
+    # first answer, read throughput with one crashed replica
+    "cluster_failover",
 ]
 
 # integration benchmarks: skipped (by name) only when a genuinely optional

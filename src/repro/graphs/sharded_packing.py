@@ -175,6 +175,24 @@ def shard_assignment(part: np.ndarray, n_shards: int,
     return (pos_of // span).astype(np.int32)
 
 
+def majority_owner(owner_of: np.ndarray, vertices: np.ndarray) -> int:
+    """Majority vote of ``owner_of`` over ``vertices`` (ties break to the
+    lowest owner id; no vertices → owner 0).
+
+    The cluster router's query→replica fold: with ``owner_of =``
+    :func:`shard_assignment` ``(part, n_replicas)`` — the same
+    partition-dealt span arithmetic ``ShardedVMPacking.owner_of`` uses on
+    device — a query routes to the replica owning most of its start
+    vertices, so most of its first-hop frontier is owner-local and the
+    cross-replica ipt the router accounts stays the partition-quality
+    signal the paper's serving metric wants."""
+    v = np.asarray(vertices, dtype=np.int64).reshape(-1)
+    if v.size == 0:
+        return 0
+    counts = np.bincount(np.asarray(owner_of, dtype=np.int64)[v])
+    return int(np.argmax(counts))
+
+
 def bfs_shard_order(g) -> np.ndarray:
     """BFS visitation order from high-degree seeds (``pos_of``).
 

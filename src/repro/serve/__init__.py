@@ -1,3 +1,4 @@
+from repro.serve.cluster import ClusterConfig, ClusterCoordinator, ClusterRouter
 from repro.serve.engine import GraphQueryEngine, RequestResult, ServeConfig
 from repro.serve.faults import (
     FaultInjector,
@@ -9,23 +10,40 @@ from repro.serve.ingest import IngestQueue, coalesce_mutations
 from repro.serve.loop import ServeLoopConfig, ServingLoop
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queueing import Rejection, RequestQueue, ServeTicket
+from repro.serve.replication import (
+    FencedWrite,
+    FollowerReplica,
+    Frame,
+    JournalGap,
+    ReplicationHub,
+    ShipChannel,
+)
 from repro.serve.snapshot import (
     MutationJournal,
     RestoreResult,
     ServingSnapshotter,
+    apply_journal_group,
     capture_serving_state,
     plan_elastic_restore,
     restore_serving_state,
 )
 
 __all__ = [
+    "ClusterConfig",
+    "ClusterCoordinator",
+    "ClusterRouter",
     "FaultInjector",
     "FaultSpec",
+    "FencedWrite",
+    "FollowerReplica",
+    "Frame",
     "GraphQueryEngine",
     "IngestQueue",
     "InjectedFault",
+    "JournalGap",
     "MutationJournal",
     "Rejection",
+    "ReplicationHub",
     "RequestQueue",
     "RequestResult",
     "RestoreResult",
@@ -35,6 +53,8 @@ __all__ = [
     "ServeTicket",
     "ServingLoop",
     "ServingSnapshotter",
+    "ShipChannel",
+    "apply_journal_group",
     "capture_serving_state",
     "coalesce_mutations",
     "corrupt_latest_snapshot",

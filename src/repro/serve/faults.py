@@ -13,6 +13,19 @@ the loop exposes:
 * ``ingest_group`` — before a coalesced mutation group is applied (poisons
   the merged batch; exercises the per-member fallback).
 
+Replication (``serve.replication``) adds transport and replica sites.  The
+``ShipChannel`` fires transport sites per frame and interprets the armed
+spec as a network behaviour instead of an exception: ``ship_drop`` loses
+the frame, ``ship_delay`` holds it back a poll round (late, out-of-order
+delivery), ``ship_reorder`` swaps it with the next frame.  Each may be
+armed bare (every channel) or qualified per follower as
+``"<site>:<name>"``; ``link_partition`` (checked via :meth:`armed`, not
+consumed) blackholes a channel entirely.  Replica sites fault the follower
+itself: ``replica_apply`` (before a shipped frame applies — ``raise``
+crashes the replica, ``stall`` lags it) and ``replica_serve`` (before a
+read executes — ``stall`` trips the router's deadline hedging, ``raise``
+fails the read over to another replica).
+
 Snapshot corruption has no hook site — it attacks data at rest — so it is a
 plain function, :func:`corrupt_latest_snapshot`, flipping bytes in the
 newest snapshot's ``arrays.npz`` to exercise the checksum-verified
@@ -34,6 +47,16 @@ log = get_logger("serve.faults")
 SITE_INVOCATION = "invocation"
 SITE_SHARD_UPLOAD = "shard_upload"
 SITE_INGEST_GROUP = "ingest_group"
+#: replication transport sites (fired per frame by ``ShipChannel``; may be
+#: qualified per follower as ``f"{site}:{name}"``)
+SITE_SHIP_DROP = "ship_drop"
+SITE_SHIP_DELAY = "ship_delay"
+SITE_SHIP_REORDER = "ship_reorder"
+#: persistent link state (checked, not consumed): blackholes a channel
+SITE_LINK_PARTITION = "link_partition"
+#: follower replica sites: crash/stall the apply path, fail/stall reads
+SITE_REPLICA_APPLY = "replica_apply"
+SITE_REPLICA_SERVE = "replica_serve"
 
 
 class InjectedFault(RuntimeError):
@@ -99,6 +122,13 @@ class FaultInjector:
             time.sleep(spec.delay_s)
         else:
             raise spec.exc(f"injected fault at {site}")
+
+    def armed(self, site: str) -> bool:
+        """True while ``site`` is armed, without consuming a firing — for
+        persistent *state* faults (``link_partition``) that gate behaviour
+        for as long as they stay armed rather than firing N times."""
+        with self._lock:
+            return site in self._armed
 
     def fired_total(self) -> int:
         with self._lock:

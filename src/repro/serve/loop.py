@@ -89,6 +89,7 @@ from repro.serve.faults import (
 from repro.serve.ingest import IngestQueue
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queueing import Rejection, RequestQueue, ServeTicket
+from repro.serve.replication import FencedWrite, commit_payload
 from repro.serve.snapshot import (
     MutationJournal,
     RestoreResult,
@@ -245,6 +246,14 @@ class ServingLoop:
         self._abandoned: List[threading.Thread] = []
         #: set by restore(); None on a fresh loop
         self.restore_result: Optional[RestoreResult] = None
+        # -- replication (PR 8; None = single-node, zero behaviour change) -----
+        #: cluster hub this loop publishes to as primary (attach_replication)
+        self._replication = None
+        #: the epoch this loop believes it holds the write lease for; a
+        #: deposed primary keeps its stale epoch and gets fenced
+        self._epoch = 1
+        self._fenced_writes = 0
+        self._fence_error: Optional[BaseException] = None
 
     # -- client API -----------------------------------------------------------
     @property
@@ -269,7 +278,92 @@ class ServingLoop:
         """True while serving below the configured field-backend rung."""
         return self.ot.taper.config.field_backend != self._base_backend
 
+    # -- replication (primary side) -------------------------------------------
+    def attach_replication(self, hub, epoch: Optional[int] = None) -> None:
+        """Wire this loop up as the cluster primary.  Every durable write —
+        journaling an ingest group, committing an invocation, publishing a
+        snapshot — is first authorized against the hub's epoch fence (a
+        :class:`~repro.serve.replication.FencedWrite` drops the write and
+        is counted, never propagated into the serving path) and, once
+        through, shipped to the followers (group/commit frames); each pump
+        round heartbeats.  Unattached loops are bit-for-bit the single-node
+        loop."""
+        self._replication = hub
+        self._epoch = int(epoch if epoch is not None else hub.current_epoch)
+        if hub.journal is None and self._journal is not None:
+            hub.journal = self._journal
+
+    def observe_served(self, queries, ipts, latencies=None,
+                       allow_trigger: bool = True) -> None:
+        """Fold reads served *off-loop* (the cluster router answers most
+        reads directly on follower replicas) into this loop's observation
+        state — sketch, admission frequencies, ipt EWMA, tick/trigger
+        counters — so TAPER invocations still see the whole cluster's
+        query workload, not just the primary's slice."""
+        if not queries:
+            return
+        if latencies is not None:
+            self.metrics.record_batch(
+                latencies, ipts,
+                overlapped=(self._inflight is not None
+                            and not self._invocation_done.is_set()))
+        with self._observe_lock:
+            self.ot.observe(queries)
+            self._adm_freqs = self.ot.sketch.frequencies(
+                self.ot.policy.min_freq)
+            self._requests_since_invocation += len(queries)
+            mean_ipt = float(np.mean(ipts)) if len(ipts) else 0.0
+            self._ipt_ewma = (mean_ipt if self._ipt_ewma is None
+                              else 0.8 * self._ipt_ewma + 0.2 * mean_ipt)
+        if allow_trigger:
+            self._maybe_trigger()
+
+    def _note_fenced(self, exc: FencedWrite) -> None:
+        self._fenced_writes += 1
+        self._fence_error = exc
+        log.warning("fenced write rejected: %s", exc)
+
+    def _fenced_commit_guard(self) -> bool:
+        """True when a durable commit may proceed (no replication attached,
+        or the epoch fence authorized it)."""
+        if self._replication is None:
+            return True
+        try:
+            self._replication.authorize(self._epoch, "invocation commit")
+            return True
+        except FencedWrite as exc:
+            self._note_fenced(exc)
+            return False
+
+    def _publish_commit(self, force: bool = False) -> None:
+        """Ship the just-committed invocation's volatile state (partition
+        vector, RNG, placement prior, counters) to the followers."""
+        if self._replication is None:
+            return
+        try:
+            self._replication.publish_commit(
+                self._epoch, commit_payload(self.ot), self._applied_seq,
+                force=force)
+        except FencedWrite as exc:
+            self._note_fenced(exc)
+
     def stats(self) -> Dict[str, float]:
+        rep: Dict[str, object] = {}
+        if self._replication is not None:
+            hub = self._replication.stats()
+            rep = dict(
+                epoch=self._epoch,
+                cluster_epoch=hub["epoch"],
+                fenced_writes=self._fenced_writes,
+                fencing_rejections=(hub["fencing_rejections"]
+                                    + hub["partition_rejections"]),
+                last_stale_epoch=hub["last_stale_epoch"],
+                fence_error=("" if self._fence_error is None
+                             else repr(self._fence_error)),
+            )
+        if self._snapshotter is not None:
+            rep["snapshot_capture_s"] = self._snapshotter.last_capture_s
+            rep["snapshot_publish_s"] = self._snapshotter.last_wall_s
         return self.metrics.snapshot(
             queue_depth=self.requests.depth(),
             ingest_depth=self.ingest.depth(),
@@ -285,6 +379,7 @@ class ServingLoop:
             invocation_error=("" if self._invocation_error is None
                               else repr(self._invocation_error)),
             journal_seq=self._applied_seq,
+            **rep,
         )
 
     @property
@@ -299,6 +394,16 @@ class ServingLoop:
         happens on the snapshotter's background thread."""
         if self._snapshotter is None:
             raise RuntimeError("snapshot_dir not configured")
+        if self._replication is not None:
+            # a zombie primary must not publish snapshots: a follower
+            # bootstrapping from one would adopt state the cluster has
+            # moved past under a newer epoch
+            try:
+                self._replication.authorize(self._epoch, "snapshot publish")
+            except FencedWrite as exc:
+                self._note_fenced(exc)
+                self.metrics.record_snapshot(False)
+                return
         try:
             with self._observe_lock:
                 # the capture copies the sketch, which secondary workers
@@ -475,6 +580,11 @@ class ServingLoop:
         return self._pump_once(wait_s=wait_s, allow_trigger=True)
 
     def _pump_once(self, wait_s: float, allow_trigger: bool) -> int:
+        if self._replication is not None:
+            # liveness beacon; silently lost from a stale epoch or across a
+            # partition, which is what starts the coordinator's failover clock
+            self._replication.heartbeat(self._epoch, self._applied_seq,
+                                        int(self.g.version))
         self._commit_if_done()
         if self._pending is None and not self._zombies_active():
             self._apply_ingest()
@@ -577,12 +687,18 @@ class ServingLoop:
                 # to _run's guard in threaded mode
                 self._pending = None
             wall = time.perf_counter() - t0
+            if not self._fenced_commit_guard():
+                # deposed primary: the enhancement ran but its result may
+                # not become durable or visible — drop it on the floor
+                self._requests_since_invocation = 0
+                return
             with self._quiesced():
                 self.ot.commit_invocation(pending)
             self.metrics.record_invocation(wall, overlapped=False)
             self._requests_since_invocation = 0
             self._note_invocation_success()
             self._warm_devices()
+            self._publish_commit()
             if self._snapshotter is not None and self.cfg.snapshot_on_commit:
                 self.snapshot(sync=False)
 
@@ -616,14 +732,18 @@ class ServingLoop:
         self._inflight.join()
         wall = time.perf_counter() - self._invocation_t0
         committed = False
+        fenced = False
         if self._pending is not None and self._pending.report is not None:
-            # quiesce only for the pointer swap: secondaries finish their
-            # in-flight batch, the commit rebinds ot.part (plus the shard
-            # re-deal bookkeeping), the gate reopens
-            with self._quiesced():
-                self.ot.commit_invocation(self._pending)
-            self.metrics.record_invocation(wall, overlapped=True)
-            committed = True
+            if self._fenced_commit_guard():
+                # quiesce only for the pointer swap: secondaries finish
+                # their in-flight batch, the commit rebinds ot.part (plus
+                # the shard re-deal bookkeeping), the gate reopens
+                with self._quiesced():
+                    self.ot.commit_invocation(self._pending)
+                self.metrics.record_invocation(wall, overlapped=True)
+                committed = True
+            else:
+                fenced = True
         self._pending = None
         self._inflight = None
         self._requests_since_invocation = 0
@@ -634,9 +754,12 @@ class ServingLoop:
             # now, on the worker between batches, so the next overlapped
             # invocation starts from a warm re-dealt layout
             self._warm_devices()
+            self._publish_commit()
             if self._snapshotter is not None and self.cfg.snapshot_on_commit:
                 self.snapshot(sync=False)
-        else:
+        elif not fenced:
+            # a fenced commit is the fence working, not a device fault —
+            # it must not walk the backend ladder
             self._note_invocation_failure()
 
     def _check_watchdog(self) -> None:
@@ -743,6 +866,17 @@ class ServingLoop:
     def _apply_ingest_locked(self) -> None:
         applied = 0
         for merged, members in self.ingest.drain_groups():
+            if self._replication is not None:
+                # the fence is checked *before* the journal append: a
+                # deposed or partitioned primary never writes divergent
+                # records into the shared WAL, so its local state stays a
+                # consistent stale prefix and rejoin is pure tail replay
+                try:
+                    self._replication.authorize(self._epoch, "ingest group")
+                except FencedWrite as exc:
+                    self._note_fenced(exc)
+                    self.ingest.failed += len(members)
+                    continue
             # WAL boundary: the group is journaled before it applies, and
             # its outcome (fold vs per-member fallback, member fates) right
             # after — replay reproduces the exact apply stream
@@ -779,6 +913,17 @@ class ServingLoop:
                     gseq, mode, flags if flags is not None
                     else [True] * len(members))
             self._applied_seq = gseq
+            if self._replication is not None:
+                try:
+                    self._replication.publish_group(
+                        self._epoch, gseq, members, mode,
+                        flags if flags is not None else [True] * len(members),
+                        int(self.g.version))
+                except FencedWrite as exc:
+                    # lost the lease between journal append and ship; the
+                    # record is durable and followers pick it up from the
+                    # journal tail, so only the push is skipped
+                    self._note_fenced(exc)
         if applied:
             self._warm_devices()
 

@@ -146,7 +146,12 @@ class ServeMetrics:
                  field_stats: Dict = None, field_backend: str = "",
                  degraded: bool = False, worker_error: str = "",
                  invocation_error: str = "",
-                 journal_seq: int = 0) -> Dict[str, float]:
+                 journal_seq: int = 0,
+                 epoch: int = 0, cluster_epoch: int = 0,
+                 fenced_writes: int = 0, fencing_rejections: int = 0,
+                 last_stale_epoch: int = -1, fence_error: str = "",
+                 snapshot_capture_s: float = 0.0,
+                 snapshot_publish_s: float = 0.0) -> Dict[str, float]:
         """Flat dict of the current SLO picture (plain python scalars).
 
         ``field_stats`` is the sharded field's last measured exchange
@@ -212,4 +217,21 @@ class ServeMetrics:
                 "snapshot_failures": self.snapshot_failures,
                 "replayed_mutations": self.replayed_mutations,
                 "journal_seq": journal_seq,
+                # -- replication health (PR 8; zeros on unreplicated loops) ----
+                # epoch = the fencing token this node believes it holds;
+                # cluster_epoch = the hub's current term.  A node with
+                # epoch < cluster_epoch is a fenced zombie: fenced_writes
+                # counts its rejected durable writes and last_stale_epoch
+                # surfaces the stale token the fence saw last
+                "epoch": epoch,
+                "cluster_epoch": cluster_epoch,
+                "fenced": int(0 < epoch < cluster_epoch),
+                "fenced_writes": fenced_writes,
+                "fencing_rejections": fencing_rejections,
+                "last_stale_epoch": last_stale_epoch,
+                "fence_error": fence_error,
+                # monotonic durations (satellite: manifest wall-time fix) —
+                # capture = copying host state, publish = background write
+                "snapshot_capture_s": snapshot_capture_s,
+                "snapshot_publish_s": snapshot_publish_s,
             }

@@ -135,6 +135,11 @@ class MutationJournal:
         self._fh = None
         self._last_seq = 0
         self.appended = 0
+        #: replication retention floor: records with ``seq > retain_floor``
+        #: are still needed by a registered follower's tail replay, so
+        #: :meth:`compact` never drops past it even when every retained
+        #: snapshot already covers them (``None`` = no followers registered)
+        self.retain_floor: Optional[int] = None
         self.path.parent.mkdir(parents=True, exist_ok=True)
         if self.path.exists():
             records, end = self._scan()
@@ -225,11 +230,23 @@ class MutationJournal:
         return [(seq, _members_from_payload(p), outcomes.get(seq))
                 for seq, p in groups if seq > int(after_seq)]
 
+    def set_retain_floor(self, seq: Optional[int]) -> None:
+        """Install the replication retention floor: ``min(acked seq)``
+        across registered followers (the hub updates it every pump round).
+        A lagging replica keeps its tail-replay window alive this way
+        instead of being forced into a full snapshot re-fetch."""
+        with self._lock:
+            self.retain_floor = None if seq is None else int(seq)
+
     def compact(self, upto_seq: int) -> int:
         """Drop records with ``seq <= upto_seq`` (covered by every retained
         durable snapshot), rewriting the file atomically.  Returns how many
-        records were dropped."""
+        records were dropped.  The replication retention floor
+        (:meth:`set_retain_floor`) clamps the cut: records a registered
+        follower has not acknowledged survive snapshot-driven pruning."""
         with self._lock:
+            if self.retain_floor is not None:
+                upto_seq = min(int(upto_seq), self.retain_floor)
             records, _ = self._scan()
             keep = [r for r in records if r[1] > int(upto_seq)]
             if len(keep) == len(records):
@@ -278,6 +295,7 @@ def capture_serving_state(ot, journal_seq: int,
     worker between micro-batches, or any thread while the loop is stopped.
     ``journal_seq`` is the WAL sequence number of the last *applied*
     mutation batch: restore replays everything after it."""
+    t0 = time.perf_counter()
     g = ot.g
     arrays: Dict[str, np.ndarray] = {
         "labels": g.labels.copy(),
@@ -302,7 +320,12 @@ def capture_serving_state(ot, journal_seq: int,
     manifest: Dict[str, Any] = {
         "format": 1,
         "kind": "serving_snapshot",
+        # wall time is for humans reading the manifest; durations derived
+        # from it would be skewed by NTP steps, so the capture cost is
+        # measured separately on the monotonic clock and threaded into
+        # ``ServingLoop.stats()`` as ``snapshot_capture_s``
         "time": time.time(),
+        "wall_time_s": time.time(),
         "k": int(ot.k),
         "graph": {
             "n": int(g.n),
@@ -329,6 +352,7 @@ def capture_serving_state(ot, journal_seq: int,
     }
     if extra:
         manifest["extra"] = dict(extra)
+    manifest["capture_duration_s"] = time.perf_counter() - t0
     return ServingState(arrays=arrays, manifest=manifest)
 
 
@@ -354,6 +378,10 @@ class ServingSnapshotter:
         self.failures = 0
         self.last_wall_s = 0.0
         self.last_bytes = 0
+        #: monotonic duration of the last state *capture* (host-side copy,
+        #: from the manifest) vs ``last_wall_s``, the publish duration —
+        #: the two halves of the snapshot cost surfaced in ``stats()``
+        self.last_capture_s = 0.0
 
     # -- inventory -----------------------------------------------------------
     def all_ids(self) -> List[int]:
@@ -374,6 +402,8 @@ class ServingSnapshotter:
         first, like the fixed ``CheckpointManager``); the capture is already
         a copy, so the caller may keep mutating immediately."""
         with self._save_lock:
+            self.last_capture_s = float(
+                state.manifest.get("capture_duration_s", 0.0))
             if self._thread is not None:
                 self._thread.join()
                 self._thread = None
@@ -532,6 +562,44 @@ def plan_elastic_restore(g: LabelledGraph, part: np.ndarray,
     return plan
 
 
+def apply_journal_group(ot, members: Sequence[MutationBatch],
+                        outcome: Optional[Dict[str, Any]]) -> Tuple[int, int]:
+    """Re-apply one journaled coalesced group to an ``OnlineTaper`` exactly
+    as the live node applied it; returns ``(applied, failed)`` batch counts.
+
+    This is the one replay fold shared by crash restore
+    (:func:`restore_serving_state`) and WAL-shipping replication
+    (``serve.replication.FollowerReplica``): a recorded ``"members"``
+    outcome (poisoned fold) reproduces the per-member fates verbatim — an
+    injected fault is not re-raised by replay, so the ``O`` record, not
+    re-execution, is the authority — while a merged outcome (or a missing
+    one, crash mid-apply) retraces the deterministic
+    try-fold-then-members path."""
+    from repro.serve.ingest import coalesce_groups
+
+    applied = failed = 0
+    if outcome is not None and outcome.get("mode") == "members":
+        for m, ok in zip(members, outcome.get("applied", ())):
+            if ok:
+                ot.apply_mutations(m)
+                applied += 1
+            else:
+                failed += 1
+    else:
+        for merged, mem in coalesce_groups(members):
+            try:
+                ot.apply_mutations(merged)
+                applied += 1
+            except ValueError:
+                for m in mem:
+                    try:
+                        ot.apply_mutations(m)
+                        applied += 1
+                    except ValueError:
+                        failed += 1
+    return applied, failed
+
+
 def restore_serving_state(
     directory,
     taper_config=None,
@@ -612,37 +680,12 @@ def restore_serving_state(
     journal_seq = int(manifest["journal_seq"])
     wal = directory / WAL_NAME
     if replay and wal.exists():
-        from repro.serve.ingest import coalesce_groups
-
         t0 = time.perf_counter()
         for seq, members, outcome in MutationJournal(wal).replay(
                 after_seq=journal_seq):
-            if outcome is not None and outcome.get("mode") == "members":
-                # the live apply fell back to per-member application (a
-                # poisoned fold); reproduce the recorded fates verbatim —
-                # an injected fault is not re-raised by replay, so the
-                # outcome record, not re-execution, is the authority
-                for m, ok in zip(members, outcome.get("applied", ())):
-                    if ok:
-                        ot.apply_mutations(m)
-                        replayed += 1
-                    else:
-                        replay_failed += 1
-            else:
-                # merged outcome, or no outcome (crash mid-apply): the
-                # standard try-fold-then-members path; deterministic
-                # validation means it retraces the live node exactly
-                for merged, mem in coalesce_groups(members):
-                    try:
-                        ot.apply_mutations(merged)
-                        replayed += 1
-                    except ValueError:
-                        for m in mem:
-                            try:
-                                ot.apply_mutations(m)
-                                replayed += 1
-                            except ValueError:
-                                replay_failed += 1
+            ok, bad = apply_journal_group(ot, members, outcome)
+            replayed += ok
+            replay_failed += bad
             journal_seq = seq
         replay_wall = time.perf_counter() - t0
     log.info(

@@ -1,0 +1,288 @@
+"""Replicated cluster serving: owner routing, cross-replica ipt
+accounting, bounded-staleness reads, deadline hedging, and the
+deterministic failover drill (crash -> promote under a new epoch ->
+bitwise-identical answers vs an uninterrupted run at the same applied
+seq -> fenced zombie -> rejoin by catch-up replay)."""
+import time
+
+import numpy as np
+
+from repro.core.online import OnlinePolicy
+from repro.core.rpq import parse_rpq
+from repro.core.taper import TaperConfig
+from repro.graphs.generators import musicbrainz_like
+from repro.graphs.graph import MutationBatch
+from repro.graphs.sharded_packing import majority_owner, shard_assignment
+from repro.serve import (
+    ClusterConfig,
+    ClusterCoordinator,
+    ServeLoopConfig,
+    ServingLoop,
+)
+from repro.serve.faults import FaultInjector, SITE_REPLICA_SERVE
+
+MQ1 = parse_rpq("Area.Artist.(Artist|Label).Area")
+MQ3 = parse_rpq("Artist.Credit.Track.Medium")
+
+
+def _policy():
+    return OnlinePolicy(bootstrap_after_ticks=0, cadence=6, min_interval=0,
+                        dirty_fraction=0.02, drift_l1=9e9,
+                        ipt_regression=9e9)
+
+
+def _cluster(tmp, n_followers=2, faults=None, **ck):
+    g = musicbrainz_like(400, seed=7)
+    cfg = ServeLoopConfig(micro_batch=8, overlap_invocations=False,
+                          snapshot_dir=str(tmp), faults=faults)
+    primary = ServingLoop(g, 4, taper_config=TaperConfig(max_iterations=2),
+                          policy=_policy(), config=cfg)
+    ck.setdefault("heartbeat_timeout_s", 9e9)
+    ccfg = ClusterConfig(n_followers=n_followers, faults=faults, **ck)
+    return ClusterCoordinator(primary, config=ccfg, policy=_policy(),
+                              taper_config=TaperConfig(max_iterations=2))
+
+
+def _drive(coord, rounds, seed=0):
+    rng = np.random.default_rng(seed)
+    n = coord.primary.g.n
+    for i in range(rounds):
+        coord.serve([MQ1 if i % 3 else MQ3], cls="hot")
+        r = rng.random()
+        if r < 0.4:
+            coord.submit_mutations(MutationBatch(
+                add_vertex_labels=[int(rng.integers(0, 4))],
+                add_edges=[(int(rng.integers(0, n)), n)]))
+            n += 1
+        elif r < 0.6:
+            coord.submit_mutations(MutationBatch(
+                add_edges=[(int(rng.integers(0, 400)),
+                            int(rng.integers(0, 400)))]))
+        coord.pump()
+
+
+# ---------------------------------------------------------------------------
+# routing + ipt accounting
+# ---------------------------------------------------------------------------
+
+
+def test_majority_owner_fold():
+    owner_of = np.array([0, 0, 1, 1, 2], np.int32)
+    assert majority_owner(owner_of, np.array([0, 1, 2])) == 0
+    assert majority_owner(owner_of, np.array([2, 3, 4])) == 1
+    assert majority_owner(owner_of, np.array([], np.int64)) == 0
+
+
+def test_owner_routing_matches_shard_assignment(tmp_path):
+    """Each query routes to the majority owner of its start vertices under
+    the same block-dealt fold the device packing uses."""
+    coord = _cluster(tmp_path, n_followers=2)
+    r = coord.router
+    owners = r.owners()
+    assert np.array_equal(
+        owners, shard_assignment(coord.primary.ot.part, coord.n_replicas,
+                                 block_n=coord.cfg.block_n))
+    for q in (MQ1, MQ3):
+        plan = coord.primary.executor._enum_plan(q)
+        starts = np.nonzero(
+            np.isin(coord.primary.g.labels, plan.first_labels))[0]
+        assert r.route(q) == majority_owner(owners, starts)
+    coord.serve([MQ1, MQ3, MQ3], cls="hot")
+    st = r.stats()
+    assert st["routed"] == 3
+    assert sum(st["routed_by_slot"].values()) == 3
+    coord.stop()
+
+
+def test_cross_replica_ipt_accounting(tmp_path):
+    """Served paths are charged for owner-boundary crossings — the
+    serving-level ipt the partition enhancement is minimising."""
+    coord = _cluster(tmp_path, n_followers=2)
+    # capture the owner fold first: observe_served may trigger an
+    # invocation right after the ipt accounting, swapping the partition
+    owners = coord.router.owners().copy()
+    res = coord.serve([MQ3] * 4, cls="hot")
+    expect = 0.0
+    for paths, _ in res:
+        for p in paths:
+            if len(p) > 1:
+                ov = owners[np.asarray(p, dtype=np.int64)]
+                expect += float((ov[1:] != ov[:-1]).sum())
+    assert coord.router.stats()["cross_replica_ipt"] == expect
+    assert expect > 0  # 4-hop paths across a 3-way block deal must cross
+    coord.stop()
+
+
+# ---------------------------------------------------------------------------
+# bounded staleness + hedging
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_staleness_gate(tmp_path):
+    """A follower beyond the class staleness bound first catches up; when
+    it cannot (blackholed link), the read falls back to the primary and is
+    counted.  A dead follower redirects immediately."""
+    fi = FaultInjector()
+    coord = _cluster(tmp_path, n_followers=1, faults=fi,
+                     max_staleness_versions={"hot": 0, "cold": 16})
+    f = coord.followers[1]
+    fi.arm("link_partition:replica-1")
+    for _ in range(3):
+        coord.submit_mutations(MutationBatch(add_edges=[(1, 2)]))
+        coord.pump()
+    assert f.version_lag > 0
+    assert coord.router._usable(1, "hot") == coord.primary_slot
+    assert coord.router.stats()["staleness_fallbacks"] == 1
+    # a cold read tolerates the lag and still lands on the follower
+    assert coord.router._usable(1, "cold") == 1
+    # heal: catch-up brings it back inside the hot bound
+    fi.disarm("link_partition:replica-1")
+    assert coord.router._usable(1, "hot") == 1
+    assert coord.router.stats()["staleness_fallbacks"] == 1
+    # a dead follower is redirected without a catch-up attempt
+    f.crash()
+    assert coord.router._usable(1, "hot") == coord.primary_slot
+    assert coord.router.stats()["dead_redirects"] == 1
+    coord.stop()
+
+
+def test_deadline_hedging_past_slo_budget(tmp_path):
+    """A read stalling past the class SLO budget re-issues to an alternate
+    replica; the faster answer wins and the hedge is counted."""
+    fi = FaultInjector()
+    coord = _cluster(tmp_path, n_followers=1, faults=fi,
+                     slo_budget_s={"hot": 0.01, "cold": 0.5})
+    coord.router.route = lambda q: 1  # pin the read to the follower
+    fi.arm(f"{SITE_REPLICA_SERVE}:replica-1", mode="stall", times=1,
+           delay_s=0.1)
+    # reference answer before serving: the observation fold after the read
+    # may trigger an invocation and swap the partition
+    direct = coord.primary.executor.enumerate_paths_many(
+        [MQ3], max_results=coord.cfg.max_results_per_query,
+        part=coord.primary.ot.part)
+    res = coord.serve([MQ3], cls="hot")
+    st = coord.router.stats()
+    assert st["hedged_requests"] == 1
+    assert st["hedged_rate"] > 0
+    # the hedged answer is bitwise the replica-parity answer
+    assert res == direct
+    coord.stop()
+
+
+def test_replica_serve_fault_fails_over_to_primary(tmp_path):
+    """A raising replica read (not just a slow one) retries on the
+    primary transparently."""
+    fi = FaultInjector()
+    coord = _cluster(tmp_path, n_followers=1, faults=fi)
+    coord.router.route = lambda q: 1
+    fi.arm(f"{SITE_REPLICA_SERVE}:replica-1", mode="raise", times=1)
+    direct = coord.primary.executor.enumerate_paths_many(
+        [MQ3], max_results=coord.cfg.max_results_per_query,
+        part=coord.primary.ot.part)
+    res = coord.serve([MQ3], cls="hot")
+    assert coord.router.stats()["read_failovers"] == 1
+    assert res == direct
+    coord.stop()
+
+
+# ---------------------------------------------------------------------------
+# the failover drill
+# ---------------------------------------------------------------------------
+
+
+def _assert_loop_parity(a, b):
+    """Bitwise parity between two serving loops' durable-replicated state."""
+    assert a.ot.g.n == b.ot.g.n and a.ot.g.version == b.ot.g.version
+    for x, y in [(a.ot.g.labels, b.ot.g.labels), (a.ot.g.src, b.ot.g.src),
+                 (a.ot.g.dst, b.ot.g.dst), (a.ot.g.row_ptr, b.ot.g.row_ptr),
+                 (a.ot.part, b.ot.part), (a.ot._dirty, b.ot._dirty)]:
+        assert np.array_equal(x, y)
+    assert a.ot.invocations == b.ot.invocations
+    assert a.ot.taper._rng.bit_generator.state == \
+        b.ot.taper._rng.bit_generator.state
+
+
+def test_failover_drill_bitwise_parity(tmp_path):
+    """The acceptance drill: run two identical clusters; crash one
+    primary (losing its unshipped ingest); the best follower promotes
+    under a higher epoch and serves *bitwise-identical* results to the
+    uninterrupted cluster at the same applied seq; the zombie's late
+    writes fence; the demoted node rejoins by pure catch-up replay."""
+    A = _cluster(tmp_path / "a", n_followers=2, heartbeat_timeout_s=0.05)
+    B = _cluster(tmp_path / "b", n_followers=2)
+    _drive(A, rounds=18, seed=3)
+    _drive(B, rounds=18, seed=3)
+    assert A.primary._applied_seq == B.primary._applied_seq
+    assert A.primary.ot.invocations > 0  # the drill spans commits
+
+    # crash mid-stream: the submitted-but-unpumped mutation below is the
+    # primary's unacknowledged write — it dies with the process
+    A.submit_mutations(MutationBatch(add_edges=[(1, 2)]))
+    old_primary, old_slot = A.primary, A.primary_slot
+    A.crash_primary()
+    time.sleep(0.06)
+    A.pump()
+
+    st = A.stats()
+    assert A.primary is not old_primary
+    assert st["cluster_epoch"] == 2 and st["failovers"] == 1
+    assert A.primary_slot != old_slot
+    assert A.primary._epoch == 2
+    # promoted at the same applied seq as the uninterrupted run
+    assert A.primary._applied_seq == B.primary._applied_seq
+    _assert_loop_parity(A.primary, B.primary)
+    for q in (MQ1, MQ3):
+        ra = A.primary.executor.enumerate_paths(
+            q, max_results=16, part=A.primary.ot.part)
+        rb = B.primary.executor.enumerate_paths(
+            q, max_results=16, part=B.primary.ot.part)
+        assert ra == rb
+    # the routed read path agrees too (followers re-converged on the
+    # promoted node's epoch-opening commit frame)
+    assert A.serve([MQ3], cls="hot") == B.serve([MQ3], cls="hot")
+
+    # the zombie's late snapshot publish carries the stale epoch
+    fw0 = old_primary.stats()["fenced_writes"]
+    old_primary.snapshot(sync=True)
+    zst = old_primary.stats()
+    assert zst["fenced_writes"] > fw0
+    assert zst["fenced"] == 1 and zst["epoch"] == 1
+    assert zst["cluster_epoch"] == 2
+
+    # demoted node rejoins as a follower by catch-up replay alone
+    f = A.rejoin_demoted(slot=old_slot, reuse_state=True)
+    _drive(A, rounds=6, seed=4)
+    f.catch_up()
+    st = f.stats()
+    assert st["seq_lag"] == 0 and st["full_resyncs"] == 0
+    assert np.array_equal(f.ot.part, A.primary.ot.part)
+    assert np.array_equal(f.ot.g.src, A.primary.ot.g.src)
+    assert f.ot.invocations == A.primary.ot.invocations
+    assert f.ot.taper._rng.bit_generator.state == \
+        A.primary.ot.taper._rng.bit_generator.state
+    assert A.stats()["rejoins"] == 1
+    A.stop()
+    B.stop()
+
+
+def test_cluster_stats_surface_replication_health(tmp_path):
+    """stats() exports the replication picture: per-follower seq/version
+    lag, the staleness bound, the epoch, and failover/fencing counters."""
+    coord = _cluster(tmp_path, n_followers=2, heartbeat_timeout_s=0.05)
+    _drive(coord, rounds=8, seed=5)
+    st = coord.stats()
+    assert st["n_replicas"] == 3 and st["primary_slot"] == 0
+    assert st["cluster_epoch"] == 1 and st["failovers"] == 0
+    assert st["staleness_bound_versions"] == {"hot": 4, "cold": 16}
+    assert set(st["followers"]) == {"replica-1", "replica-2"}
+    for fs in st["followers"].values():
+        assert {"applied_seq", "shipped_seq", "seq_lag", "version_lag",
+                "applied_commits", "tail_resyncs"} <= set(fs)
+    assert st["max_seq_lag"] >= 0 and st["hedged_rate"] >= 0
+    coord.crash_primary()
+    time.sleep(0.06)
+    coord.pump()
+    st = coord.stats()
+    assert st["failovers"] == 1 and st["cluster_epoch"] == 2
+    assert st["epoch"] == 2  # the stats now come from the promoted node
+    coord.stop()

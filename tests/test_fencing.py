@@ -1,0 +1,188 @@
+"""Epoch fencing and durable-write integrity: the partitioned zombie's
+post-failover invocation commit AND snapshot publish are rejected with a
+stale epoch (surfaced in stats()), torn-tail WAL truncation at every byte
+offset of the final frame, and the snapshot manifest's wall-time /
+capture-duration split."""
+import json
+import time
+
+import numpy as np
+
+from repro.core.online import OnlinePolicy
+from repro.core.rpq import parse_rpq
+from repro.core.taper import TaperConfig
+from repro.graphs.generators import musicbrainz_like
+from repro.graphs.graph import MutationBatch
+from repro.serve import (
+    ClusterConfig,
+    ClusterCoordinator,
+    ServeLoopConfig,
+    ServingLoop,
+)
+from repro.serve.replication import FencedWrite
+from repro.serve.snapshot import MutationJournal
+
+MQ3 = parse_rpq("Artist.Credit.Track.Medium")
+
+
+def _policy():
+    return OnlinePolicy(bootstrap_after_ticks=0, cadence=6, min_interval=0,
+                        dirty_fraction=0.02, drift_l1=9e9,
+                        ipt_regression=9e9)
+
+
+def _cluster(tmp, **ck):
+    g = musicbrainz_like(400, seed=7)
+    cfg = ServeLoopConfig(micro_batch=8, overlap_invocations=False,
+                          snapshot_dir=str(tmp))
+    primary = ServingLoop(g, 4, taper_config=TaperConfig(max_iterations=2),
+                          policy=_policy(), config=cfg)
+    ck.setdefault("n_followers", 1)
+    ck.setdefault("heartbeat_timeout_s", 0.05)
+    return ClusterCoordinator(primary, config=ClusterConfig(**ck),
+                              policy=_policy(),
+                              taper_config=TaperConfig(max_iterations=2))
+
+
+# ---------------------------------------------------------------------------
+# zombie fencing
+# ---------------------------------------------------------------------------
+
+
+def test_zombie_commit_and_snapshot_fenced_with_stale_epoch(tmp_path):
+    """After a partition-driven failover the deposed primary keeps
+    running.  Its next invocation commit and its snapshot publish both
+    carry epoch 1 against a cluster at epoch 2 — rejected at the fence,
+    visible in stats(), and *not* charged as invocation failures (a
+    fenced commit must not walk the backend-fallback ladder)."""
+    coord = _cluster(tmp_path)
+    for i in range(8):
+        coord.serve([MQ3], cls="hot")
+        coord.submit_mutations(MutationBatch(
+            add_edges=[(i % 7, (3 * i) % 11)]))
+        coord.pump()
+    old = coord.primary
+    coord.partition_primary()
+    time.sleep(0.06)
+    coord.pump()
+    assert coord.primary is not old
+    assert coord.stats()["cluster_epoch"] == 2
+
+    # the zombie serves its own request stream: the only durable writes it
+    # will attempt are invocation commits (requests only, no mutations)
+    before = old.stats()
+    for _ in range(14):
+        old.submit(MQ3)
+        old.pump()
+    zst = old.stats()
+    assert zst["fenced_writes"] > before["fenced_writes"]
+    assert zst["invocation_failures"] == before["invocation_failures"]
+    assert zst["invocations"] == before["invocations"]  # commit never ran
+    assert zst["epoch"] == 1 and zst["cluster_epoch"] == 2
+    assert zst["fenced"] == 1
+    assert zst["last_stale_epoch"] == 1
+    assert "stale epoch 1" in zst["fence_error"]
+
+    # the zombie's snapshot publish is fenced the same way
+    fw0, sf0 = zst["fenced_writes"], zst["snapshot_failures"]
+    old.snapshot(sync=True)
+    zst = old.stats()
+    assert zst["fenced_writes"] == fw0 + 1
+    assert zst["snapshot_failures"] == sf0 + 1
+
+    # cluster-side accounting saw the rejections too
+    cst = coord.stats()
+    assert cst["fencing_rejections"] > 0
+    assert cst["last_stale_epoch"] == 1
+    assert cst["stale_heartbeats"] > 0
+    coord.stop()
+
+
+def test_authorize_raises_fenced_write(tmp_path):
+    """The fence primitive itself: stale epoch vs lapsed (partitioned)
+    lease are distinguishable on the raised error."""
+    coord = _cluster(tmp_path)
+    hub = coord.hub
+    hub.partition_primary(True)
+    try:
+        hub.authorize(1, "ingest group")
+        raise AssertionError("partitioned write not fenced")
+    except FencedWrite as e:
+        assert e.partitioned and e.what == "ingest group"
+    hub.partition_primary(False)
+    hub.advance_epoch()
+    try:
+        hub.authorize(1, "snapshot publish")
+        raise AssertionError("stale-epoch write not fenced")
+    except FencedWrite as e:
+        assert not e.partitioned
+        assert e.stale_epoch == 1 and e.current_epoch == 2
+    coord.stop()
+
+
+# ---------------------------------------------------------------------------
+# WAL torn tails
+# ---------------------------------------------------------------------------
+
+
+def test_torn_tail_truncation_at_every_offset(tmp_path):
+    """Kill the writer mid-frame at *every* byte offset of the final
+    frame of a 3-record journal: reopening always recovers the intact
+    prefix, truncates the torn bytes, and stays appendable."""
+    src = tmp_path / "wal.log"
+    j = MutationJournal(src)
+    s1 = j.append_group([MutationBatch(add_edges=[(0, 1)])])
+    j.append_outcome(s1, "merged", [True])
+    size2 = src.stat().st_size
+    j.append_group([MutationBatch(add_vertex_labels=[1],
+                                  add_edges=[(1, 2)]),
+                    MutationBatch(add_edges=[(2, 3)])])
+    size3 = src.stat().st_size
+    j.close()
+    blob = src.read_bytes()
+    assert size3 > size2 + 16  # the final frame spans many offsets
+    for off in range(size2, size3):
+        d = tmp_path / f"torn_{off}"
+        d.mkdir()
+        p = d / "wal.log"
+        p.write_bytes(blob[:off])
+        jj = MutationJournal(p)
+        assert p.stat().st_size == size2  # torn bytes gone
+        groups = jj.replay()
+        assert [g[0] for g in groups] == [1]
+        _, members, outcome = groups[0]
+        assert len(members) == 1
+        assert outcome == {"mode": "merged", "applied": [True]}
+        # appends after recovery continue the sequence and stay readable
+        assert jj.append_group([MutationBatch(add_edges=[(4, 5)])]) == 2
+        jj.close()
+        assert [g[0] for g in MutationJournal(p).replay()] == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# snapshot manifest timing (satellite: wall time vs capture duration)
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_manifest_wall_time_and_capture_duration(tmp_path):
+    """The manifest's ``time`` is wall-clock (not a monotonic counter),
+    the capture cost is measured separately on the monotonic clock, and
+    both halves of the snapshot cost surface in stats()."""
+    g = musicbrainz_like(300, seed=3)
+    cfg = ServeLoopConfig(micro_batch=8, overlap_invocations=False,
+                          snapshot_dir=str(tmp_path))
+    loop = ServingLoop(g, 4, taper_config=TaperConfig(max_iterations=2),
+                       policy=_policy(), config=cfg)
+    loop.snapshot(sync=True)
+    snaps = sorted(tmp_path.glob("snap_*"))
+    man = json.loads((snaps[-1] / "manifest.json").read_text())
+    now = time.time()
+    # wall clock: epoch seconds, not a small monotonic-counter value
+    assert man["time"] > 1e9 and abs(man["time"] - now) < 300
+    assert abs(man["wall_time_s"] - man["time"]) < 5.0
+    assert 0 < man["capture_duration_s"] < 60
+    st = loop.stats()
+    assert st["snapshot_capture_s"] == man["capture_duration_s"]
+    assert st["snapshot_publish_s"] > 0
+    assert st["snapshots_taken"] >= 1
+    loop.stop()

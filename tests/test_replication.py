@@ -1,0 +1,289 @@
+"""WAL-shipping replication: transport faults (drop/delay/reorder/link
+partition, per-follower qualified sites), follower bootstrap + bitwise
+parity at every shipped seq, gap-driven tail resync, the compaction
+retention floor, and replica crash/rejoin in both modes."""
+import numpy as np
+
+from repro.core.online import OnlinePolicy
+from repro.core.rpq import parse_rpq
+from repro.core.taper import TaperConfig
+from repro.graphs.generators import musicbrainz_like
+from repro.graphs.graph import MutationBatch
+from repro.serve import (
+    ClusterConfig,
+    ClusterCoordinator,
+    ServeLoopConfig,
+    ServingLoop,
+)
+from repro.serve.faults import (
+    FaultInjector,
+    SITE_LINK_PARTITION,
+    SITE_REPLICA_APPLY,
+    SITE_SHIP_DELAY,
+    SITE_SHIP_DROP,
+    SITE_SHIP_REORDER,
+)
+
+MQ1 = parse_rpq("Area.Artist.(Artist|Label).Area")
+MQ3 = parse_rpq("Artist.Credit.Track.Medium")
+
+
+def _policy():
+    # durable-state-only triggers (see test_recovery): a replica that
+    # adopted the shipped commit stream re-decides invocations identically
+    return OnlinePolicy(bootstrap_after_ticks=0, cadence=6, min_interval=0,
+                        dirty_fraction=0.02, drift_l1=9e9,
+                        ipt_regression=9e9)
+
+
+def _cluster(tmp, n_followers=1, faults=None, snapshot_keep=3, **ck):
+    g = musicbrainz_like(400, seed=7)
+    cfg = ServeLoopConfig(micro_batch=8, overlap_invocations=False,
+                          snapshot_dir=str(tmp), snapshot_keep=snapshot_keep,
+                          faults=faults)
+    primary = ServingLoop(g, 4, taper_config=TaperConfig(max_iterations=2),
+                          policy=_policy(), config=cfg)
+    ccfg = ClusterConfig(n_followers=n_followers, faults=faults,
+                         heartbeat_timeout_s=9e9, **ck)
+    return ClusterCoordinator(primary, config=ccfg, policy=_policy(),
+                              taper_config=TaperConfig(max_iterations=2))
+
+
+def _drive(coord, rounds, seed=0, serve=True):
+    """Deterministic serve+mutate+pump rounds against the coordinator."""
+    rng = np.random.default_rng(seed)
+    n = coord.primary.g.n
+    for i in range(rounds):
+        if serve:
+            coord.serve([MQ1 if i % 3 else MQ3], cls="hot")
+        r = rng.random()
+        if r < 0.4:
+            coord.submit_mutations(MutationBatch(
+                add_vertex_labels=[int(rng.integers(0, 4))],
+                add_edges=[(int(rng.integers(0, n)), n)]))
+            n += 1
+        elif r < 0.6:
+            coord.submit_mutations(MutationBatch(
+                add_edges=[(int(rng.integers(0, 400)),
+                            int(rng.integers(0, 400)))]))
+        coord.pump()
+
+
+def _assert_replica_parity(f, loop):
+    """Bitwise parity of a follower against a serving loop: graph arrays,
+    version, partition, dirty bits, invocation counters, swap-RNG state,
+    and the enumeration results both would serve."""
+    a, b = f.ot, loop.ot
+    assert a.g.n == b.g.n and a.g.version == b.g.version
+    for x, y in [(a.g.labels, b.g.labels), (a.g.src, b.g.src),
+                 (a.g.dst, b.g.dst), (a.g.row_ptr, b.g.row_ptr),
+                 (a.part, b.part), (a._dirty, b._dirty)]:
+        assert np.array_equal(x, y)
+    assert a.invocations == b.invocations
+    assert a.taper._rng.bit_generator.state == \
+        b.taper._rng.bit_generator.state
+    for q in (MQ1, MQ3):
+        ra = f.executor.enumerate_paths(q, max_results=16, part=a.part)
+        rb = loop.executor.enumerate_paths(q, max_results=16, part=b.part)
+        assert ra == rb
+
+
+# ---------------------------------------------------------------------------
+# steady-state shipping
+# ---------------------------------------------------------------------------
+
+
+def test_follower_bootstrap_and_shipped_parity(tmp_path):
+    """Followers bootstrap like a restarted node, then stay bitwise-equal
+    to the primary through shipped groups AND shipped invocation commits
+    (RNG state is the commit-frame litmus test)."""
+    coord = _cluster(tmp_path, n_followers=2)
+    _drive(coord, rounds=30, seed=0)
+    for f in coord.followers.values():
+        f.catch_up()
+        st = f.stats()
+        assert st["seq_lag"] == 0 and st["full_resyncs"] == 0
+        assert st["applied_groups"] > 0
+        _assert_replica_parity(f, coord.primary)
+    assert coord.primary.ot.invocations > 0
+    assert coord.followers[1].stats()["applied_commits"] > 0
+    coord.stop()
+
+
+def test_ship_drop_recovers_via_tail_resync(tmp_path):
+    """A dropped group frame leaves a seq gap; the follower detects it
+    (newer frames keep arriving) and tail-resyncs from the journal —
+    never a full snapshot re-fetch."""
+    fi = FaultInjector()
+    coord = _cluster(tmp_path, n_followers=1, faults=fi)
+    f = coord.followers[1]
+    _drive(coord, rounds=4, seed=1)
+    # next heartbeat + the group for this mutation both drop
+    fi.arm(f"{SITE_SHIP_DROP}:replica-1", times=2)
+    coord.submit_mutations(MutationBatch(add_edges=[(1, 2)]))
+    coord.pump()
+    assert f.stats()["channel_dropped"] >= 1
+    for _ in range(4):  # gap persists resync_after_polls -> tail resync
+        coord.pump()
+    st = f.stats()
+    assert st["seq_lag"] == 0
+    assert st["tail_resyncs"] >= 1 and st["full_resyncs"] == 0
+    _assert_replica_parity(f, coord.primary)
+    coord.stop()
+
+
+def test_ship_delay_and_reorder_are_absorbed(tmp_path):
+    """Delayed (late, out-of-order) and swapped frames are buffered by seq
+    and applied strictly in order — parity holds without re-bootstrap."""
+    fi = FaultInjector()
+    coord = _cluster(tmp_path, n_followers=1, faults=fi)
+    f = coord.followers[1]
+    fi.arm(f"{SITE_SHIP_DELAY}:replica-1", times=2)
+    coord.submit_mutations(MutationBatch(add_edges=[(3, 4)]))
+    coord.pump()
+    coord.submit_mutations(MutationBatch(add_edges=[(5, 6)]))
+    coord.pump()
+    fi.arm(f"{SITE_SHIP_REORDER}:replica-1", times=1)
+    coord.submit_mutations(MutationBatch(add_edges=[(7, 8)]))
+    for _ in range(5):
+        coord.pump()
+    st = f.stats()
+    assert st["channel_delayed"] >= 1
+    assert st["channel_reordered"] >= 1
+    assert st["seq_lag"] == 0 and st["full_resyncs"] == 0
+    _assert_replica_parity(f, coord.primary)
+    coord.stop()
+
+
+def test_qualified_site_targets_one_follower(tmp_path):
+    """``site:name`` qualification faults one link; the other follower's
+    transport stays clean and both converge."""
+    fi = FaultInjector()
+    coord = _cluster(tmp_path, n_followers=2, faults=fi)
+    fi.arm(f"{SITE_SHIP_DROP}:replica-1", times=3)
+    _drive(coord, rounds=10, seed=2, serve=False)
+    for _ in range(4):
+        coord.pump()
+    s1 = coord.followers[1].stats()
+    s2 = coord.followers[2].stats()
+    assert s1["channel_dropped"] >= 1
+    assert s2["channel_dropped"] == 0
+    for f in coord.followers.values():
+        _assert_replica_parity(f, coord.primary)
+    coord.stop()
+
+
+# ---------------------------------------------------------------------------
+# partition + retention floor
+# ---------------------------------------------------------------------------
+
+
+def test_link_partition_blackholes_then_heals_by_tail_replay(tmp_path):
+    """A partitioned link loses frames in flight and stops acks; healing
+    goes through tail resync because the retention floor (min acked across
+    live followers) kept the journal window alive."""
+    fi = FaultInjector()
+    coord = _cluster(tmp_path, n_followers=1, faults=fi)
+    f = coord.followers[1]
+    _drive(coord, rounds=4, seed=3, serve=False)
+    f.catch_up()
+    acked0 = coord.hub.acked()["replica-1"]
+    fi.arm(f"{SITE_LINK_PARTITION}:replica-1")
+    _drive(coord, rounds=8, seed=4, serve=False)
+    st = f.stats()
+    assert st["channel_blocked"] >= 1
+    assert st["seq_lag"] > 0
+    # no acks across the blackhole: the floor pins at the pre-partition seq
+    assert coord.hub.acked()["replica-1"] == acked0
+    assert coord.primary._journal.retain_floor == acked0
+    fi.disarm(f"{SITE_LINK_PARTITION}:replica-1")
+    for _ in range(4):
+        coord.pump()
+    st = f.stats()
+    assert st["seq_lag"] == 0
+    assert st["tail_resyncs"] >= 1 and st["full_resyncs"] == 0
+    _assert_replica_parity(f, coord.primary)
+    coord.stop()
+
+
+def test_retention_floor_slow_follower_survives_keep_1(tmp_path):
+    """``snapshot_keep=1`` compacts the WAL aggressively after every
+    commit snapshot; a live-but-partitioned follower's unacked tail must
+    survive that pruning so it can catch up without a full re-fetch."""
+    fi = FaultInjector()
+    coord = _cluster(tmp_path, n_followers=1, faults=fi, snapshot_keep=1)
+    f = coord.followers[1]
+    _drive(coord, rounds=4, seed=5)
+    f.catch_up()
+    fi.arm(f"{SITE_LINK_PARTITION}:replica-1")
+    # serve-driven rounds so invocation commits fire -> snapshots -> compaction
+    _drive(coord, rounds=24, seed=6)
+    assert coord.primary.stats()["snapshots_taken"] >= 2
+    # the journal still reaches back to the follower's acked position
+    acked = coord.hub.acked()["replica-1"]
+    tail = coord.primary._journal.replay(after_seq=acked)
+    assert [s for s, _, _ in tail][:1] == [acked + 1] or not tail
+    fi.disarm(f"{SITE_LINK_PARTITION}:replica-1")
+    for _ in range(4):
+        coord.pump()
+    st = f.stats()
+    assert st["seq_lag"] == 0
+    assert st["full_resyncs"] == 0  # tail replay sufficed
+    _assert_replica_parity(f, coord.primary)
+    coord.stop()
+
+
+def test_dead_replica_does_not_pin_the_wal(tmp_path):
+    """A crashed follower is excluded from the retention floor, so the
+    journal compacts past it; its rejoin then needs the full re-bootstrap
+    path (JournalGap -> snapshot re-fetch) and still reaches parity."""
+    coord = _cluster(tmp_path, n_followers=1, snapshot_keep=1)
+    f = coord.followers[1]
+    _drive(coord, rounds=4, seed=7)
+    f.catch_up()
+    f.crash()
+    _drive(coord, rounds=24, seed=8)
+    # compaction ran unclamped: the tail no longer reaches the dead replica
+    assert coord.primary._journal.retain_floor is None
+    f.rejoin(reuse_state=True)
+    for _ in range(4):
+        coord.pump()
+    st = f.stats()
+    assert st["full_resyncs"] >= 1
+    assert st["seq_lag"] == 0
+    _assert_replica_parity(f, coord.primary)
+    coord.stop()
+
+
+# ---------------------------------------------------------------------------
+# replica crash / rejoin
+# ---------------------------------------------------------------------------
+
+
+def test_replica_crash_and_rejoin_both_modes(tmp_path):
+    """An injected apply fault crashes the replica (it stops applying,
+    serving and acking); rejoin with kept memory is pure catch-up replay,
+    rejoin without is a fresh bootstrap — both end at bitwise parity."""
+    fi = FaultInjector()
+    coord = _cluster(tmp_path, n_followers=1, faults=fi)
+    f = coord.followers[1]
+    _drive(coord, rounds=4, seed=9, serve=False)
+    fi.arm(f"{SITE_REPLICA_APPLY}:replica-1", times=1)
+    coord.submit_mutations(MutationBatch(add_edges=[(9, 10)]))
+    coord.pump()
+    assert not f.alive and f.crash_error is not None
+    _drive(coord, rounds=6, seed=10, serve=False)
+    f.rejoin(reuse_state=True)
+    assert f.alive
+    st = f.stats()
+    assert st["seq_lag"] == 0 and st["full_resyncs"] == 0
+    _assert_replica_parity(f, coord.primary)
+    # crash again; this time the process is "lost" -> full bootstrap
+    f.crash()
+    _drive(coord, rounds=6, seed=11, serve=False)
+    f.rejoin(reuse_state=False)
+    for _ in range(2):
+        coord.pump()
+    assert f.stats()["seq_lag"] == 0
+    _assert_replica_parity(f, coord.primary)
+    coord.stop()

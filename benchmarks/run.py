@@ -41,6 +41,9 @@ CORE = [
     # replicated cluster: follower catch-up replay, fenced failover to
     # first answer, read throughput with one crashed replica
     "cluster_failover",
+    # observability overhead: traced vs untraced serving throughput
+    # (<=5% gated standalone), trace_sample_rate=0 ~free
+    "obs_overhead",
 ]
 
 # integration benchmarks: skipped (by name) only when a genuinely optional

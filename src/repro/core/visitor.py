@@ -637,6 +637,7 @@ def _pallas_sharded_field(
 
     full = sp.full_field_bytes_per_depth(n, N)
     halo = sp.halo_bytes_per_depth(N, exchange=halo_exchange)
+    max_depth = min(trie.max_depth, depth_cap)
     pre["_halo_stats"] = {
         "halo_bytes_per_depth": halo,
         "full_field_bytes_per_depth": full,
@@ -647,9 +648,11 @@ def _pallas_sharded_field(
         "n_frontier": sp.n_frontier,
         "hot_rows": sp.hot_pad,
         "sliced_rows": sp.hot_pad + int(sp.round_cap[1:].sum()),
+        # DP depth steps the kernel ran (each one is a halo exchange) —
+        # the invocation trace emits one field.depth event per step
+        "depth_steps": max(int(max_depth) - 1, 0),
     }
 
-    max_depth = min(trie.max_depth, depth_cap)
     counted = [
         i for i in range(N)
         if 1 <= int(trie.depth[i]) < max_depth and not bool(trie.is_leaf[i])

@@ -86,7 +86,7 @@ rebuild.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -332,6 +332,27 @@ class ShardedVMPacking:
                                    itemsize: int = 4) -> int:
         """Bytes an all-gather of the full field would move instead."""
         return n * n_trie * itemsize
+
+    def exchange_metrics(self, n_trie: int, n: int,
+                         itemsize: int = 4) -> Dict[str, float]:
+        """Numeric exchange-footprint summary for the metrics registry's
+        ``collect()`` protocol: per-depth bytes under both exchange modes,
+        the full-field baseline, and the live packing geometry."""
+        full = self.full_field_bytes_per_depth(n, n_trie, itemsize)
+        return {
+            "n_shards": self.n_shards,
+            "n_local_pad": self.n_local_pad,
+            "n_frontier": self.n_frontier,
+            "hot_rows": self.hot_pad,
+            "sliced_rows": self.hot_pad + int(self.round_cap[1:].sum()),
+            "halo_bytes_psum": self.halo_bytes_per_depth(
+                n_trie, itemsize, exchange="psum"),
+            "halo_bytes_sliced": self.halo_bytes_per_depth(
+                n_trie, itemsize, exchange="sliced"),
+            "full_field_bytes": full,
+            "shard_epoch_max": int(self.shard_epoch.max())
+            if self.n_shards else 0,
+        }
 
     def scatter_slot_values(self, values: np.ndarray, m: int,
                             dtype=np.float32) -> np.ndarray:

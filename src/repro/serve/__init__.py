@@ -1,3 +1,4 @@
+from repro.obs import FlightRecorder, Observability, Registry, Tracer
 from repro.serve.cluster import ClusterConfig, ClusterCoordinator, ClusterRouter
 from repro.serve.engine import GraphQueryEngine, RequestResult, ServeConfig
 from repro.serve.faults import (
@@ -35,9 +36,13 @@ __all__ = [
     "FaultInjector",
     "FaultSpec",
     "FencedWrite",
+    "FlightRecorder",
     "FollowerReplica",
     "Frame",
     "GraphQueryEngine",
+    "Observability",
+    "Registry",
+    "Tracer",
     "IngestQueue",
     "InjectedFault",
     "JournalGap",

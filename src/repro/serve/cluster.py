@@ -47,6 +47,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.graphs.sharded_packing import majority_owner, shard_assignment
+from repro.obs import Observability
+from repro.obs.trace import NOOP_SPAN, NOOP_TRACE
 from repro.serve.faults import FaultInjector, InjectedFault
 from repro.serve.loop import ServingLoop
 from repro.serve.replication import FollowerReplica, ReplicationHub
@@ -76,6 +78,10 @@ class ClusterConfig:
     #: follower polls a gap may persist before a tail resync
     resync_after_polls: int = 2
     faults: Optional[FaultInjector] = None
+    #: shared observability bundle (tracer / flight recorder / registry);
+    #: defaults to the primary loop's bundle so cluster spans and the
+    #: loop's invocation spans land in one place
+    obs: Optional[Observability] = None
 
 
 class ClusterRouter:
@@ -92,6 +98,8 @@ class ClusterRouter:
         self.dead_redirects = 0
         self.read_failovers = 0
         self.cross_replica_ipt = 0.0
+        #: per-SLO-class latency histograms, lazily bound to the registry
+        self._lat_hists: Dict[str, Any] = {}
 
     def owners(self) -> np.ndarray:
         """Per-vertex owning replica slot under the current primary
@@ -169,6 +177,14 @@ class ClusterRouter:
         cfg = coord.cfg
         if max_results is None:
             max_results = cfg.max_results_per_query
+        # first read answered after a failover joins the failover trace:
+        # the cross-node crash → fence → promotion → first-answer story
+        fo_sp = NOOP_SPAN
+        if coord._failover_ctx is not None:
+            fo_sp = coord.obs.tracer.start(
+                "failover.first-answer", coord._failover_ctx,
+                cls=cls, n_queries=len(queries))
+            coord._failover_ctx = None
         by_slot: Dict[int, List[int]] = {}
         for i, q in enumerate(queries):
             slot = self._usable(self.route(q), cls)
@@ -210,6 +226,14 @@ class ClusterRouter:
                     self.cross_replica_ipt += float((ov[1:] != ov[:-1]).sum())
         coord.primary.observe_served(
             list(queries), [ipt for _, ipt in out], latencies=lats)
+        if coord.obs.enabled:
+            h = self._lat_hists.get(cls)
+            if h is None:
+                h = self._lat_hists[cls] = coord.obs.registry.histogram(
+                    "router_latency_s", cls=cls)
+            for lat in lats:
+                h.observe(lat)
+        fo_sp.end(n_served=len(out))
         return out
 
     def stats(self) -> Dict[str, Any]:
@@ -223,6 +247,10 @@ class ClusterRouter:
             "read_failovers": self.read_failovers,
             "cross_replica_ipt": self.cross_replica_ipt,
         }
+
+    def collect(self) -> Dict[str, Any]:
+        """Registry-collector hook (flattened by ``flatten_numeric``)."""
+        return self.stats()
 
 
 class ClusterCoordinator:
@@ -246,6 +274,10 @@ class ClusterCoordinator:
         self._policy = policy if policy is not None else primary.ot.policy
         self.faults = (self.cfg.faults if self.cfg.faults is not None
                        else primary.cfg.faults)
+        self.obs = (self.cfg.obs if self.cfg.obs is not None
+                    else primary.obs)
+        #: forced failover trace awaiting its first answered read
+        self._failover_ctx = None
         self.hub = ReplicationHub(journal=primary._journal,
                                   faults=self.faults)
         self.hub.primary_version = int(primary.g.version)
@@ -266,6 +298,23 @@ class ClusterCoordinator:
         self._primary_down = False
         #: deposed primaries by their old slot, awaiting rejoin_demoted()
         self._demoted: Dict[int, ServingLoop] = {}
+        if self.obs.enabled:
+            for slot, f in self.followers.items():
+                self._wire_obs(f, slot)
+            if self.faults is not None and self.faults.recorder is None:
+                self.faults.recorder = self.obs.recorder
+            self.obs.registry.register_collector("cluster", self.collect)
+            self.obs.registry.register_collector("router",
+                                                 self.router.collect)
+            self.obs.registry.register_collector("hub", self.hub.collect)
+
+    def _wire_obs(self, follower: FollowerReplica, slot: int) -> None:
+        """Hand the shared tracer/recorder to a follower so its applies
+        join shipped traces, and expose its stats as a collector."""
+        follower.tracer = self.obs.tracer
+        follower.recorder = self.obs.recorder
+        self.obs.registry.register_collector(f"follower_{slot}",
+                                             follower.collect)
 
     # -- shape ----------------------------------------------------------------
     @property
@@ -322,9 +371,12 @@ class ClusterCoordinator:
         heartbeat) past ``heartbeat_timeout_s``."""
         if not (self._primary_down or self.hub.primary_partitioned):
             return False
-        if (time.monotonic() - self.hub.last_heartbeat_mono
-                < self.cfg.heartbeat_timeout_s):
+        silent_s = time.monotonic() - self.hub.last_heartbeat_mono
+        if silent_s < self.cfg.heartbeat_timeout_s:
             return False
+        self.obs.recorder.record(
+            "heartbeat_lapse", slot=self.primary_slot, silent_s=silent_s,
+            timeout_s=self.cfg.heartbeat_timeout_s)
         self.fail_over()
         return True
 
@@ -332,6 +384,15 @@ class ClusterCoordinator:
         """Promote the best live follower under a new epoch (module doc).
         Deterministic choice: highest applied seq, then highest commit
         index, then lowest slot."""
+        # one forced cross-node trace tells the whole failover story:
+        # primary-crash → fence → promotion → (router) first answer
+        tracer = self.obs.tracer
+        fo_ctx = tracer.new_trace(force=True)
+        root = tracer.start("failover", fo_ctx, from_slot=self.primary_slot)
+        ctx = root.context()
+        tracer.event("failover.primary-crash", ctx, slot=self.primary_slot,
+                     crashed=self._primary_down,
+                     partitioned=self.hub.primary_partitioned)
         live = [(slot, f) for slot, f in self.followers.items() if f.alive]
         if not live:
             raise RuntimeError("no live follower to promote")
@@ -347,8 +408,13 @@ class ClusterCoordinator:
                                   -it[0]))
         old, old_slot = self.primary, self.primary_slot
         epoch = self.hub.advance_epoch()
+        tracer.event("failover.fence", ctx, epoch=epoch)
+        promo = tracer.start("failover.promotion", ctx, slot=slot,
+                             epoch=epoch, applied_seq=best.applied_seq)
         self.followers.pop(slot)
         self.hub.unregister(best.name)
+        if self.obs.enabled:
+            self.obs.registry.unregister_collector(f"follower_{slot}")
         if self._primary_down:
             # the dead process takes its file handles with it
             try:
@@ -358,7 +424,9 @@ class ClusterCoordinator:
                     old._journal.close()
             except Exception:
                 log.exception("closing dead primary handles failed")
-        promoted = ServingLoop(config=dc_replace(old.cfg), ot=best.ot)
+        loop_cfg = (dc_replace(old.cfg, obs=self.obs) if self.obs.enabled
+                    else dc_replace(old.cfg))
+        promoted = ServingLoop(config=loop_cfg, ot=best.ot)
         promoted._applied_seq = best.applied_seq
         self.hub.journal = promoted._journal
         promoted.attach_replication(self.hub, epoch)
@@ -369,14 +437,26 @@ class ClusterCoordinator:
         self.failovers += 1
         # epoch-opening commit (the term-opening no-op): broadcast the
         # promoted node's full commit-volatile state so every replica —
-        # and the zombie when it rejoins — re-converges on it bitwise
+        # and the zombie when it rejoins — re-converges on it bitwise.
+        # The frame carries the failover trace id, so follower
+        # ``replica.commit`` spans join this trace cross-node.
+        promoted._invocation_ctx = promo.context()
         promoted._publish_commit(force=True)
+        promoted._clear_invocation_trace()
         promoted._warm_devices()
         # fresh snapshot under the new epoch: later bootstraps and full
         # resyncs start from promoted state
         promoted.snapshot(sync=True)
         for f in self.followers.values():
             f.poll()
+        promo.end()
+        self.obs.recorder.record("promotion", slot=slot, epoch=epoch,
+                                 applied_seq=best.applied_seq,
+                                 demoted_slot=old_slot)
+        self.obs.recorder.trigger("failover")
+        root.end(promoted_slot=slot, epoch=epoch)
+        if fo_ctx.sampled:
+            self._failover_ctx = ctx
         log.warning("failover: slot %d promoted at epoch %d (seq %d); "
                     "slot %d demoted", slot, epoch, best.applied_seq,
                     old_slot)
@@ -429,6 +509,11 @@ class ClusterCoordinator:
                 resync_after_polls=self.cfg.resync_after_polls)
         self.followers[slot] = f
         self.rejoins += 1
+        if self.obs.enabled:
+            self._wire_obs(f, slot)
+        self.obs.recorder.record("rejoin", slot=slot,
+                                 reuse_state=bool(reuse_state),
+                                 applied_seq=f.applied_seq)
         return f
 
     # -- lifecycle / stats ----------------------------------------------------
@@ -470,3 +555,23 @@ class ClusterCoordinator:
                           for f in self.followers.values()},
         })
         return s
+
+    def collect(self) -> Dict[str, Any]:
+        """Registry-collector hook: cluster health only (the primary loop
+        and each follower register their own collectors)."""
+        hub = self.hub.stats()
+        alive = [f for f in self.followers.values() if f.alive]
+        return {
+            "n_replicas": self.n_replicas,
+            "primary_slot": self.primary_slot,
+            "failovers": self.failovers,
+            "rejoins": self.rejoins,
+            "epoch": hub["epoch"],
+            "fencing_rejections": (hub["fencing_rejections"]
+                                   + hub["partition_rejections"]),
+            "stale_heartbeats": hub["stale_heartbeats"],
+            "max_seq_lag": max((f.seq_lag for f in alive), default=0),
+            "max_version_lag": max((f.version_lag for f in alive),
+                                   default=0),
+            "followers_alive": len(alive),
+        }

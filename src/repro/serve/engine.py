@@ -25,6 +25,7 @@ from repro.core.online import OnlinePolicy
 from repro.core.rpq import RPQ
 from repro.core.taper import TaperConfig
 from repro.graphs.graph import LabelledGraph, MutationBatch
+from repro.obs import Observability
 from repro.serve.loop import ServeLoopConfig, ServingLoop
 from repro.workload.sketch import FrequencySketch
 
@@ -41,6 +42,12 @@ class ServeConfig:
     #: directory for durable snapshots + mutation WAL (None = crash safety
     #: off); passed straight through to ``ServeLoopConfig.snapshot_dir``
     snapshot_dir: Optional[str] = None
+    #: request-trace sampling rate (0 = tracing off); forwarded to
+    #: ``ServeLoopConfig.trace_sample_rate``.  For full control (shared
+    #: registry, flight-recorder dump dir) pass ``obs`` instead.
+    trace_sample_rate: float = 0.0
+    #: pre-built observability bundle; overrides ``trace_sample_rate``
+    obs: Optional["Observability"] = None
     taper: TaperConfig = field(default_factory=lambda: TaperConfig(max_iterations=4))
 
 
@@ -81,6 +88,8 @@ class GraphQueryEngine:
                 first_invocation_after=self.cfg.first_invocation_after,
                 overlap_invocations=False,  # inline drive: synchronous
                 snapshot_dir=self.cfg.snapshot_dir,
+                trace_sample_rate=self.cfg.trace_sample_rate,
+                obs=self.cfg.obs,
             ),
         )
         self.g = g
@@ -98,6 +107,10 @@ class GraphQueryEngine:
     @property
     def sketch(self):
         return self.loop.ot.sketch
+
+    @property
+    def obs(self):
+        return self.loop.obs
 
     @property
     def invocations(self) -> int:

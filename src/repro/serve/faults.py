@@ -89,6 +89,10 @@ class FaultInjector:
         self._lock = threading.Lock()
         self._armed: Dict[str, FaultSpec] = {}
         self.fired: Dict[str, int] = {}
+        #: optional flight recorder (wired by the serving loop / cluster):
+        #: every armed firing records a ``fault_fired`` event and triggers
+        #: an auto-dump, so the ring around the fault is preserved
+        self.recorder = None
 
     def arm(self, site: str, mode: str = "raise", times: int = 1,
             delay_s: float = 0.0,
@@ -118,6 +122,9 @@ class FaultInjector:
                     del self._armed[site]
             self.fired[site] = self.fired.get(site, 0) + 1
         log.info("firing injected fault at %s (%s)", site, spec.mode)
+        if self.recorder is not None:
+            self.recorder.record("fault_fired", site=site, mode=spec.mode)
+            self.recorder.trigger(f"fault:{site}")
         if spec.mode == "stall":
             time.sleep(spec.delay_s)
         else:

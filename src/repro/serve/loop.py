@@ -86,6 +86,8 @@ from repro.serve.faults import (
     SITE_INVOCATION,
     SITE_SHARD_UPLOAD,
 )
+from repro.obs import Observability
+from repro.obs.trace import NOOP_SPAN, NOOP_TRACE
 from repro.serve.ingest import IngestQueue
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queueing import Rejection, RequestQueue, ServeTicket
@@ -151,6 +153,14 @@ class ServeLoopConfig:
     backend_probe_after: int = 8
     #: fault-injection registry (tests / recovery benchmark)
     faults: Optional[FaultInjector] = None
+    # -- observability (PR 9) -------------------------------------------------
+    #: shared tracing/flight-recorder/registry bundle; None builds one from
+    #: ``trace_sample_rate`` (or the shared disabled bundle at rate 0, the
+    #: default — the hot path then pays a single attribute check)
+    obs: Optional[Observability] = None
+    #: request-trace sampling rate used when ``obs`` is not given
+    #: (1.0 = every request, 0.0 = observability off)
+    trace_sample_rate: float = 0.0
 
 
 class ServingLoop:
@@ -254,6 +264,48 @@ class ServingLoop:
         self._epoch = 1
         self._fenced_writes = 0
         self._fence_error: Optional[BaseException] = None
+        # -- observability (PR 9) ----------------------------------------------
+        if self.cfg.obs is not None:
+            self.obs = self.cfg.obs
+        elif self.cfg.trace_sample_rate > 0:
+            self.obs = Observability(
+                trace_sample_rate=self.cfg.trace_sample_rate)
+        else:
+            self.obs = Observability.disabled()
+        self._obs_on = self.obs.enabled
+        #: the in-flight (or just-committed) invocation's trace context;
+        #: the coordinator also plants a failover trace here so the forced
+        #: epoch-opening commit frame carries it across nodes
+        self._invocation_ctx = NOOP_TRACE
+        self._invocation_span = NOOP_SPAN
+        if self._obs_on:
+            # queue + fault injector only pay tracing costs when wired
+            self.requests.tracer = self.obs.tracer
+            self.requests.recorder = self.obs.recorder
+            if self._faults is not None and self._faults.recorder is None:
+                self._faults.recorder = self.obs.recorder
+            self.ot.taper.tracer = self.obs.tracer
+            # replace-on-reregister: a promoted loop takes over the dead
+            # primary's collector slots on the shared registry
+            self.obs.registry.register_collector("serve", self.collect)
+            self.obs.registry.register_collector(
+                "executor", self.executor.collect)
+
+    def collect(self) -> Dict[str, float]:
+        """Metrics-registry collector: the loop's full SLO snapshot (the
+        registry keeps numeric values and drops the string fields)."""
+        return self.stats()
+
+    def _inv_span(self, name: str, **attrs):
+        """Span under the current invocation trace (no-op when unsampled)."""
+        if not self._invocation_ctx.sampled:
+            return NOOP_SPAN
+        return self.obs.tracer.start(name, self._invocation_ctx, **attrs)
+
+    def _clear_invocation_trace(self) -> None:
+        self._invocation_ctx = NOOP_TRACE
+        self._invocation_span = NOOP_SPAN
+        self.ot.taper.trace_ctx = None
 
     # -- client API -----------------------------------------------------------
     @property
@@ -321,6 +373,8 @@ class ServingLoop:
     def _note_fenced(self, exc: FencedWrite) -> None:
         self._fenced_writes += 1
         self._fence_error = exc
+        self.obs.recorder.record("fence_rejection", epoch=self._epoch,
+                                 error=repr(exc))
         log.warning("fenced write rejected: %s", exc)
 
     def _fenced_commit_guard(self) -> bool:
@@ -340,10 +394,14 @@ class ServingLoop:
         vector, RNG, placement prior, counters) to the followers."""
         if self._replication is None:
             return
+        payload = commit_payload(self.ot)
+        if self._invocation_ctx.sampled:
+            # piggyback the invocation (or failover) trace id on the frame
+            # so the followers' applies join the originating trace
+            payload["trace_id"] = self._invocation_ctx.trace_id
         try:
             self._replication.publish_commit(
-                self._epoch, commit_payload(self.ot), self._applied_seq,
-                force=force)
+                self._epoch, payload, self._applied_seq, force=force)
         except FencedWrite as exc:
             self._note_fenced(exc)
 
@@ -609,12 +667,27 @@ class ServingLoop:
                       and not self._invocation_done.is_set())
         queries = [t.query for t in batch]
         part = self.ot.part  # one read: stable for the whole micro-batch
+        batch_span = NOOP_SPAN
+        if self._obs_on:
+            # one drain→enumerate→reply span per micro-batch, joined to the
+            # first sampled ticket's trace (a per-ticket span here would tax
+            # the hot path ~2x; every sampled request still closes its own
+            # admission-opened "request" span with the serve outcome)
+            for t in batch:
+                if t.trace.sampled:
+                    batch_span = self.obs.tracer.start(
+                        "request.batch", t.trace, worker_id=worker_id,
+                        batch_size=len(batch),
+                        queue_wait_s=(time.perf_counter() - t.submitted_s))
+                    break
         t0 = time.perf_counter()
         enum_stats: Dict[str, int] = {}
         results = self.executor.enumerate_paths_many(
             queries, max_results=self.cfg.max_results_per_query, part=part,
             stats=enum_stats)
         dt = time.perf_counter() - t0
+        batch_span.end(enum_sweeps=enum_stats.get("enum_sweeps", 0),
+                       frontier_rows=enum_stats.get("frontier_rows", 0))
         for ticket, (paths, crossings) in zip(batch, results):
             ticket.complete(paths, crossings)
         self.requests.record_service_time(dt / len(batch))
@@ -654,10 +727,24 @@ class ServingLoop:
         elif (self._requests_since_invocation
                 < self.cfg.min_requests_between_invocations):
             return
-        with self._observe_lock:
-            # the invocation snapshot reads the sketch/workload state
-            pending = self.ot.begin_invocation(reason)
+        inv_root = NOOP_SPAN
+        if self._obs_on:
+            # invocations are rare and load-bearing: always sampled
+            ctx = self.obs.tracer.new_trace(force=True)
+            inv_root = self.obs.tracer.start(
+                "invocation", ctx, reason=str(reason),
+                overlapped=self.cfg.overlap_invocations, epoch=self._epoch)
+            self._invocation_ctx = inv_root.context()
+            self._invocation_span = inv_root
+            # field/swap/redeal spans inside Taper join this trace
+            self.ot.taper.trace_ctx = self._invocation_ctx
+        with self._inv_span("invocation.snapshot"):
+            with self._observe_lock:
+                # the invocation snapshot reads the sketch/workload state
+                pending = self.ot.begin_invocation(reason)
         if pending is None:
+            inv_root.end(skipped=True)
+            self._clear_invocation_trace()
             return
         self._pending = pending
         if self.cfg.overlap_invocations:
@@ -676,9 +763,11 @@ class ServingLoop:
                 if self._faults is not None:
                     self._faults.fire(SITE_INVOCATION)
                 self.ot.run_invocation(pending)
-            except BaseException:
+            except BaseException as exc:
                 self.metrics.record_invocation_failure()
                 self._note_invocation_failure()
+                inv_root.end(error=repr(exc))
+                self._clear_invocation_trace()
                 raise
             finally:
                 # a failed run must not leave the loop looking mid-flight
@@ -691,14 +780,19 @@ class ServingLoop:
                 # deposed primary: the enhancement ran but its result may
                 # not become durable or visible — drop it on the floor
                 self._requests_since_invocation = 0
+                inv_root.end(fenced=True)
+                self._clear_invocation_trace()
                 return
-            with self._quiesced():
-                self.ot.commit_invocation(pending)
+            with self._inv_span("invocation.commit"):
+                with self._quiesced():
+                    self.ot.commit_invocation(pending)
             self.metrics.record_invocation(wall, overlapped=False)
             self._requests_since_invocation = 0
             self._note_invocation_success()
             self._warm_devices()
             self._publish_commit()
+            inv_root.end(committed=True, wall_s=wall)
+            self._clear_invocation_trace()
             if self._snapshotter is not None and self.cfg.snapshot_on_commit:
                 self.snapshot(sync=False)
 
@@ -738,8 +832,9 @@ class ServingLoop:
                 # quiesce only for the pointer swap: secondaries finish
                 # their in-flight batch, the commit rebinds ot.part (plus
                 # the shard re-deal bookkeeping), the gate reopens
-                with self._quiesced():
-                    self.ot.commit_invocation(self._pending)
+                with self._inv_span("invocation.commit"):
+                    with self._quiesced():
+                        self.ot.commit_invocation(self._pending)
                 self.metrics.record_invocation(wall, overlapped=True)
                 committed = True
             else:
@@ -755,12 +850,20 @@ class ServingLoop:
             # invocation starts from a warm re-dealt layout
             self._warm_devices()
             self._publish_commit()
+            self._invocation_span.end(committed=True, wall_s=wall)
+            self._clear_invocation_trace()
             if self._snapshotter is not None and self.cfg.snapshot_on_commit:
                 self.snapshot(sync=False)
-        elif not fenced:
-            # a fenced commit is the fence working, not a device fault —
-            # it must not walk the backend ladder
-            self._note_invocation_failure()
+        else:
+            self._invocation_span.end(
+                committed=False, fenced=fenced,
+                error=("" if self._invocation_error is None
+                       else repr(self._invocation_error)))
+            self._clear_invocation_trace()
+            if not fenced:
+                # a fenced commit is the fence working, not a device fault —
+                # it must not walk the backend ladder
+                self._note_invocation_failure()
 
     def _check_watchdog(self) -> None:
         """Abort-and-abandon an overlapped run that blew its timeout.
@@ -783,6 +886,11 @@ class ServingLoop:
         self._invocation_error = err
         self.metrics.record_watchdog_abort()
         self.metrics.record_invocation_failure()
+        self.obs.recorder.record("watchdog_abort", timeout_s=float(timeout))
+        self.obs.recorder.trigger("degradation:watchdog_abort")
+        self._invocation_span.end(committed=False, aborted=True,
+                                  error=str(err))
+        self._clear_invocation_trace()
         self._pending = None
         self._inflight = None
         # fresh event: the zombie holds (and will set) the old one
@@ -816,6 +924,9 @@ class ServingLoop:
         self.metrics.record_backend_fallback()
         self._consec_invocation_failures = 0
         self._healthy_since_fallback = 0
+        self.obs.recorder.record("backend_fallback", from_backend=cur,
+                                 to_backend=nxt)
+        self.obs.recorder.trigger("degradation:backend_fallback")
         log.warning("field backend degraded %s -> %s after repeated "
                     "invocation failures", cur, nxt)
 
@@ -839,6 +950,8 @@ class ServingLoop:
         up = FIELD_BACKEND_LADDER[i - 1]
         self.ot.taper.set_field_backend(up)
         self.metrics.record_backend_recovery()
+        self.obs.recorder.record("backend_recovery", from_backend=cur,
+                                 to_backend=up)
         # a failed probe falls straight back down (the ladder counters
         # re-engage); doubling the dwell makes a flapping device converge
         # onto its stable rung instead of oscillating
@@ -866,6 +979,11 @@ class ServingLoop:
     def _apply_ingest_locked(self) -> None:
         applied = 0
         for merged, members in self.ingest.drain_groups():
+            ing_ctx = (self.obs.tracer.new_trace() if self._obs_on
+                       else NOOP_TRACE)
+            ing_span = (self.obs.tracer.start("ingest.group", ing_ctx,
+                                              members=len(members))
+                        if ing_ctx.sampled else NOOP_SPAN)
             if self._replication is not None:
                 # the fence is checked *before* the journal append: a
                 # deposed or partitioned primary never writes divergent
@@ -876,6 +994,7 @@ class ServingLoop:
                 except FencedWrite as exc:
                     self._note_fenced(exc)
                     self.ingest.failed += len(members)
+                    ing_span.end(fenced=True)
                     continue
             # WAL boundary: the group is journaled before it applies, and
             # its outcome (fold vs per-member fallback, member fates) right
@@ -918,12 +1037,15 @@ class ServingLoop:
                     self._replication.publish_group(
                         self._epoch, gseq, members, mode,
                         flags if flags is not None else [True] * len(members),
-                        int(self.g.version))
+                        int(self.g.version),
+                        trace_id=(ing_ctx.trace_id if ing_ctx.sampled
+                                  else None))
                 except FencedWrite as exc:
                     # lost the lease between journal append and ship; the
                     # record is durable and followers pick it up from the
                     # journal tail, so only the push is skipped
                     self._note_fenced(exc)
+            ing_span.end(seq=gseq, mode=mode)
         if applied:
             self._warm_devices()
 
@@ -938,23 +1060,27 @@ class ServingLoop:
         if taper.config.field_backend != "pallas_sharded":
             return
         try:
-            if self._faults is not None:
-                self._faults.fire(SITE_SHARD_UPLOAD)
-            import jax
-
-            from repro.core.visitor import _sharded_device_arrays
-
-            pre = taper._pre
-            mesh = pre.get("_mesh")
-            n_shards = (int(mesh.shape["model"]) if mesh is not None
-                        else len(jax.devices()))
-            token, order = pre.get("_shard_order") or ("stripe", None)
-            sp = self.g.vm_packing_sharded(
-                n_shards, cnt=self.g.cached_neighbor_label_counts(),
-                order=order, order_token=token)
-            _sharded_device_arrays(sp, pre)
+            with self._inv_span("invocation.shard_upload"):
+                self._warm_devices_inner()
         except BaseException:
             self.metrics.record_upload_failure()
             self._note_invocation_failure()
             log.exception("shard upload failed; serving continues on the "
                           "previous device state")
+
+    def _warm_devices_inner(self) -> None:
+        if self._faults is not None:
+            self._faults.fire(SITE_SHARD_UPLOAD)
+        import jax
+
+        from repro.core.visitor import _sharded_device_arrays
+
+        pre = self.ot.taper._pre
+        mesh = pre.get("_mesh")
+        n_shards = (int(mesh.shape["model"]) if mesh is not None
+                    else len(jax.devices()))
+        token, order = pre.get("_shard_order") or ("stripe", None)
+        sp = self.g.vm_packing_sharded(
+            n_shards, cnt=self.g.cached_neighbor_label_counts(),
+            order=order, order_token=token)
+        _sharded_device_arrays(sp, pre)

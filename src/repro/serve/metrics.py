@@ -9,16 +9,21 @@ without importing anything from this package."""
 from __future__ import annotations
 
 import threading
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 
 class SlidingWindow:
-    """Bounded ring of float samples with exact percentiles over the ring."""
+    """Bounded ring of float samples with exact percentiles over the ring.
+
+    The sorted view is computed lazily and cached until the next
+    ``record`` — snapshot paths take 4 percentiles per window, and
+    re-sorting the full ring for each was measurable at serving rates."""
 
     def __init__(self, window: int = 2048):
         self._buf: List[float] = []
         self._pos = 0
         self._window = int(window)
+        self._sorted: Optional[List[float]] = None
 
     def record(self, x: float) -> None:
         if len(self._buf) < self._window:
@@ -26,11 +31,14 @@ class SlidingWindow:
         else:
             self._buf[self._pos] = float(x)
             self._pos = (self._pos + 1) % self._window
+        self._sorted = None
 
     def percentile(self, p: float) -> float:
         if not self._buf:
             return 0.0
-        s = sorted(self._buf)
+        s = self._sorted
+        if s is None:
+            s = self._sorted = sorted(self._buf)
         idx = min(len(s) - 1, max(0, int(round(p / 100.0 * (len(s) - 1)))))
         return s[idx]
 
@@ -143,7 +151,7 @@ class ServeMetrics:
     def snapshot(self, queue_depth: int = 0, ingest_depth: int = 0,
                  rejected_requests: int = 0, rejected_cold_requests: int = 0,
                  rejected_mutations: int = 0, failed_mutations: int = 0,
-                 field_stats: Dict = None, field_backend: str = "",
+                 field_stats: Optional[Dict] = None, field_backend: str = "",
                  degraded: bool = False, worker_error: str = "",
                  invocation_error: str = "",
                  journal_seq: int = 0,
@@ -162,6 +170,10 @@ class ServeMetrics:
         fs = field_stats or {}
         with self._lock:
             c = max(self.completed, 1)
+            # flat-dict contract: per-worker completions export as scalar
+            # completed_by_worker_<i> keys, never as a nested dict
+            by_worker = {f"completed_by_worker_{w}": n
+                         for w, n in sorted(self.completed_by_worker.items())}
             return {
                 "completed": self.completed,
                 "batches": self.batches,
@@ -197,7 +209,7 @@ class ServeMetrics:
                 "frontier_rows_per_batch":
                     self.frontier_rows / max(self.batches, 1),
                 "workers_reporting": len(self.completed_by_worker),
-                "completed_by_worker": dict(self.completed_by_worker),
+                **by_worker,
                 # -- health / degradation -------------------------------------
                 # "healthy" means: no unrecovered worker or invocation error
                 # and the loop is serving at its configured (base) backend

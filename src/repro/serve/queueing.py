@@ -34,9 +34,10 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Tuple, Union
+from typing import Any, Callable, List, Optional, Tuple, Union
 
 from repro.core.rpq import RPQ
+from repro.obs.trace import NOOP_SPAN, NOOP_TRACE, TraceContext
 
 
 @dataclass
@@ -63,6 +64,11 @@ class ServeTicket:
     paths: Optional[List[Tuple[int, ...]]] = None
     ipt: int = 0
     latency_s: float = 0.0
+    #: trace context opened at admission; carried with the ticket so the
+    #: drain/enumeration spans on another thread join the request's trace
+    trace: TraceContext = NOOP_TRACE
+    #: the root "request" span; ended (with latency/ipt attrs) at complete()
+    span: Any = NOOP_SPAN
 
     @property
     def accepted(self) -> bool:
@@ -75,6 +81,8 @@ class ServeTicket:
         self.paths = paths
         self.ipt = int(ipt)
         self.latency_s = time.perf_counter() - self.submitted_s
+        self.span.end(latency_s=self.latency_s, ipt=self.ipt,
+                      n_paths=len(paths) if paths is not None else 0)
         self.done.set()
 
 
@@ -108,6 +116,11 @@ class RequestQueue:
         self.submitted = 0
         self.rejected = 0
         self.rejected_cold = 0
+        #: observability hooks (wired by the serving loop when obs is on):
+        #: tracer opens a trace per admitted request, recorder captures
+        #: admission rejects as flight-recorder events
+        self.tracer = None
+        self.recorder = None
 
     def _hint_scale(self, weight: Optional[float]) -> float:
         """Retry-hint multiplier from relative heat: hot queries (above the
@@ -129,6 +142,11 @@ class RequestQueue:
             hint = max(depth, 1) * self._service_s * self._hint_scale(w)
             if depth >= self.max_depth:
                 self.rejected += 1
+                if self.recorder is not None:
+                    self.recorder.record("admission_reject",
+                                         reason="queue_full",
+                                         queue_depth=depth,
+                                         retry_after_s=hint)
                 return Rejection(retry_after_s=hint, queue_depth=depth)
             if (w is not None
                     and depth >= self.max_depth * (1 - self.hot_reserve_frac)
@@ -137,12 +155,27 @@ class RequestQueue:
                 # rows are warm, so they clear backlog fastest
                 self.rejected += 1
                 self.rejected_cold += 1
+                if self.recorder is not None:
+                    self.recorder.record("admission_reject",
+                                         reason="cold_backpressure",
+                                         queue_depth=depth,
+                                         retry_after_s=hint)
                 return Rejection(retry_after_s=hint, queue_depth=depth,
                                  reason="cold_backpressure")
             if w is not None:
                 a = self._ewma_alpha
                 self._weight_ewma = (1 - a) * self._weight_ewma + a * w
             ticket = ServeTicket(query=query, submitted_s=time.perf_counter())
+            if self.tracer is not None:
+                ctx = self.tracer.new_trace()
+                if ctx.sampled:
+                    # the raw query object: stringified only at export
+                    # (to_text() per admission would tax the hot path)
+                    span = self.tracer.start("request", ctx,
+                                             query=query,
+                                             queue_depth=depth)
+                    ticket.trace = span.context()
+                    ticket.span = span
             self._items.append(ticket)
             self.submitted += 1
             self._nonempty.notify()

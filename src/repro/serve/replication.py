@@ -418,12 +418,15 @@ class ReplicationHub:
 
     def publish_group(self, epoch: int, seq: int,
                       members: Sequence, mode: str,
-                      applied: Sequence[bool], version_after: int) -> Frame:
+                      applied: Sequence[bool], version_after: int,
+                      trace_id: Optional[str] = None) -> Frame:
         """Ship one just-journaled-and-applied mutation group (the loop
         calls this right after writing the ``O`` record).  The frame
         carries the primary's commit index at publish time: a follower
         missing an earlier commit frame holds the group back (total-order
-        gating) instead of applying past the commit's emission point."""
+        gating) instead of applying past the commit's emission point.
+        ``trace_id`` piggybacks the originating ingest trace on the frame
+        so follower applies join it."""
         self.authorize(epoch, "group ship")
         with self._lock:
             frame = Frame(
@@ -434,6 +437,8 @@ class ReplicationHub:
                     "applied": [bool(a) for a in applied],
                     "version_after": int(version_after),
                     "commit_index": len(self._commits),
+                    **({"trace_id": str(trace_id)}
+                       if trace_id is not None else {}),
                 })
             self.primary_seq = max(self.primary_seq, int(seq))
             self.primary_version = max(self.primary_version,
@@ -545,6 +550,11 @@ class ReplicationHub:
                 "retained_commits": len(self._commits),
             }
 
+    def collect(self) -> Dict[str, Any]:
+        """Metrics-registry collector (``stats`` is already numeric apart
+        from per-follower nesting, which the registry flattens)."""
+        return self.stats()
+
 
 # ---------------------------------------------------------------------------
 # follower replica
@@ -598,6 +608,19 @@ class FollowerReplica:
         self.served = 0
         self._gap_polls = 0
         self._desynced = False
+        #: observability hooks (wired by the cluster coordinator): the
+        #: tracer joins frame-borne trace ids so a follower's apply shows
+        #: up inside the originating ingest/commit trace; the recorder
+        #: captures resync/rebootstrap transitions
+        self.tracer = None
+        self.recorder = None
+
+    def _join_span(self, name: str, trace_id, **attrs):
+        """Span joined to a frame-borne trace id (None → no span)."""
+        if self.tracer is None or not trace_id:
+            return None
+        ctx = self.tracer.join(trace_id)
+        return self.tracer.start(name, ctx, replica=self.name, **attrs)
 
     # -- bootstrap -----------------------------------------------------------
     @classmethod
@@ -776,6 +799,8 @@ class FollowerReplica:
 
     def _apply_group(self, f: Frame) -> None:
         _fire_site(self._faults, SITE_REPLICA_APPLY, self.name)
+        sp = self._join_span("replica.apply", f.payload.get("trace_id"),
+                             seq=int(f.seq))
         members = _members_from_payload(f.payload["members"])
         outcome = {"mode": f.payload.get("mode", "merged"),
                    "applied": f.payload.get("applied",
@@ -783,6 +808,8 @@ class FollowerReplica:
         apply_journal_group(self.ot, members, outcome)
         self.applied_seq = int(f.seq)
         self.applied_groups += 1
+        if sp is not None:
+            sp.end(members=len(members))
         va = f.payload.get("version_after")
         if va is not None and int(va) != int(self.ot.g.version):
             # bitwise-parity invariant broken (should be impossible): a
@@ -797,9 +824,14 @@ class FollowerReplica:
 
     def _apply_commit(self, f: Frame) -> None:
         _fire_site(self._faults, SITE_REPLICA_APPLY, self.name)
+        sp = self._join_span("replica.commit", f.payload.get("trace_id"),
+                             commit_index=int(f.commit_index),
+                             epoch=int(f.epoch), force=bool(f.force))
         adopt_commit_payload(self.ot, f.payload)
         self.commit_index = int(f.commit_index)
         self.applied_commits += 1
+        if sp is not None:
+            sp.end()
 
     def _resync(self) -> int:
         """Tail resync: re-fetch the missing stream from durable state.
@@ -817,6 +849,10 @@ class FollowerReplica:
         self._ingest_frames(frames)
         n = self._drain()
         self.tail_resyncs += 1
+        if self.recorder is not None:
+            self.recorder.record("tail_resync", replica=self.name,
+                                 applied_seq=self.applied_seq,
+                                 frames=len(frames))
         return n
 
     def _rebootstrap(self) -> None:
@@ -824,6 +860,9 @@ class FollowerReplica:
             raise RuntimeError(
                 f"replica {self.name} needs a full re-bootstrap but has no "
                 "snapshot directory")
+        if self.recorder is not None:
+            self.recorder.record("full_resync", replica=self.name,
+                                 applied_seq=self.applied_seq)
         res = restore_serving_state(self.directory,
                                     taper_config=self._taper_config,
                                     policy=self._policy)
@@ -906,3 +945,8 @@ class FollowerReplica:
             "channel_reordered": self.channel.reordered,
             "channel_blocked": self.channel.blocked,
         }
+
+    def collect(self) -> Dict[str, Any]:
+        """Metrics-registry collector (the non-numeric ``name`` field is
+        dropped by the registry's flattening)."""
+        return self.stats()

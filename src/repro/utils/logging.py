@@ -27,3 +27,19 @@ def get_logger(name: str) -> logging.Logger:
     if not name.startswith("repro"):
         name = f"repro.{name}"
     return logging.getLogger(name)
+
+
+def json_default(obj):
+    """``json.dumps(..., default=json_default)`` helper that folds numpy
+    scalars/arrays (and anything else with ``item``/``tolist``) into plain
+    Python values; unknown objects degrade to ``str`` rather than raising
+    mid-export."""
+    tolist = getattr(obj, "tolist", None)
+    if callable(tolist):
+        return tolist()
+    item = getattr(obj, "item", None)
+    if callable(item):
+        return item()
+    if isinstance(obj, (set, frozenset)):
+        return sorted(obj)
+    return str(obj)

@@ -166,6 +166,14 @@ class QueryExecutor:
         #: share the executor across threads
         self.last_enum_stats: Dict[str, int] = {
             "enum_sweeps": 0, "frontier_rows": 0}
+        #: lifetime counters behind the metrics registry's ``collect()``
+        #: protocol (cumulative across every batched enumeration; benign
+        #: GIL-atomic increments under concurrent workers)
+        self.total_enum_calls = 0
+        self.total_enum_sweeps = 0
+        self.total_frontier_rows = 0
+        self.plans_compiled = 0
+        self.plan_cache_hits = 0
         #: descending start-vertex lists keyed qhash -> (graph version,
         #: starts); a benign data race under concurrent workers at worst
         #: recomputes one entry
@@ -387,6 +395,7 @@ class QueryExecutor:
                 # LRU, not FIFO: a hit renews the plan, so a hot serving
                 # query outlives any number of cold insertions
                 self._plan_cache.move_to_end(qh)
+                self.plan_cache_hits += 1
                 return plan
             strings = q.strings(self.max_len or 32, self.star_max)
             name_to_id = {s: i for i, s in enumerate(self.g.label_names)}
@@ -422,6 +431,7 @@ class QueryExecutor:
             while len(self._plan_cache) >= self.PLAN_CACHE_LIMIT:
                 self._plan_cache.popitem(last=False)
             self._plan_cache[qh] = plan
+            self.plans_compiled += 1
             return plan
 
     def _starts_desc(self, plan: _EnumPlan) -> np.ndarray:
@@ -679,9 +689,25 @@ class QueryExecutor:
                 out[i] = (paths, crossings)
         self.last_enum_stats = {"enum_sweeps": sweeps,
                                 "frontier_rows": frontier_rows}
+        self.total_enum_calls += 1
+        self.total_enum_sweeps += sweeps
+        self.total_frontier_rows += frontier_rows
         if stats is not None:
             stats.update(self.last_enum_stats)
         return out
+
+    def collect(self) -> Dict[str, int]:
+        """Metrics-registry collector: lifetime enumeration counters and
+        cache occupancy (flat numeric dict)."""
+        return {
+            "enum_calls": self.total_enum_calls,
+            "enum_sweeps": self.total_enum_sweeps,
+            "frontier_rows": self.total_frontier_rows,
+            "plans_compiled": self.plans_compiled,
+            "plan_cache_hits": self.plan_cache_hits,
+            "plan_cache_size": len(self._plan_cache),
+            "count_cache_size": len(self._cache),
+        }
 
 
 def ipt_of_partition(

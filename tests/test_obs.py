@@ -1,0 +1,439 @@
+"""Observability subsystem: tracer sampling and span trees, the flight
+recorder ring + triggered JSONL dumps (at every fault site), the unified
+metrics registry (collect protocol, Prometheus round-trip), and the
+serving loop's request/invocation/ingest trace integration."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.online import OnlinePolicy
+from repro.core.rpq import parse_rpq
+from repro.core.taper import TaperConfig
+from repro.graphs.generators import musicbrainz_like
+from repro.graphs.graph import MutationBatch
+from repro.obs import (
+    NOOP_SPAN,
+    NOOP_TRACE,
+    FlightRecorder,
+    Observability,
+    Registry,
+    Tracer,
+    flatten_numeric,
+    parse_prometheus_text,
+)
+from repro.serve import ServeLoopConfig, ServingLoop
+from repro.serve.faults import (
+    FaultInjector,
+    InjectedFault,
+    SITE_INGEST_GROUP,
+    SITE_INVOCATION,
+    SITE_LINK_PARTITION,
+    SITE_REPLICA_APPLY,
+    SITE_REPLICA_SERVE,
+    SITE_SHARD_UPLOAD,
+    SITE_SHIP_DELAY,
+    SITE_SHIP_DROP,
+    SITE_SHIP_REORDER,
+)
+from repro.serve.metrics import ServeMetrics, SlidingWindow
+from repro.utils.timing import Timer
+
+MQ1 = parse_rpq("Area.Artist.(Artist|Label).Area")
+MQ3 = parse_rpq("Artist.Credit.Track.Medium")
+
+ALL_FAULT_SITES = [
+    SITE_INVOCATION, SITE_SHARD_UPLOAD, SITE_INGEST_GROUP, SITE_SHIP_DROP,
+    SITE_SHIP_DELAY, SITE_SHIP_REORDER, SITE_LINK_PARTITION,
+    SITE_REPLICA_APPLY, SITE_REPLICA_SERVE,
+]
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_span_tree_and_ring():
+    tr = Tracer(node="a")
+    ctx = tr.new_trace()
+    assert ctx.sampled and ctx.trace_id.startswith("t-a-")
+    with tr.start("root", ctx, kind="test") as root:
+        child = tr.start("child", root.context())
+        child.end(ok=True)
+        tr.event("mark", root.context(), depth=2)
+    spans = tr.spans(ctx.trace_id)
+    by_name = {s["name"]: s for s in spans}
+    assert set(by_name) == {"root", "child", "mark"}
+    assert by_name["child"]["parent_id"] == by_name["root"]["span_id"]
+    assert by_name["mark"]["parent_id"] == by_name["root"]["span_id"]
+    assert by_name["child"]["attrs"] == {"ok": True}
+    assert by_name["mark"]["duration_s"] == 0.0  # instant span
+    assert by_name["root"]["duration_s"] >= 0.0
+    assert by_name["root"]["wall"] > 0
+
+
+def test_tracer_sampling_is_deterministic_counting():
+    tr = Tracer(sample_rate=0.5)
+    sampled = [tr.new_trace().sampled for _ in range(10)]
+    assert sampled == [True, False] * 5
+    assert tr.sampled_traces == 5 and tr.unsampled_traces == 5
+    # unsampled traces produce only the shared no-op span
+    assert tr.start("x", NOOP_TRACE) is NOOP_SPAN
+
+
+def test_tracer_rate_zero_and_force():
+    tr = Tracer(sample_rate=0.0)
+    assert not tr.new_trace().sampled
+    assert tr.new_trace(force=True).sampled  # forced: invocations, failover
+    off = Tracer(enabled=False)
+    assert off.new_trace(force=True) is NOOP_TRACE  # off beats force
+
+
+def test_tracer_join_adopts_foreign_trace():
+    a, b = Tracer(node="a"), Tracer(node="b")
+    ctx = a.new_trace()
+    a.start("origin", ctx).end()
+    joined = b.join(ctx.trace_id)
+    b.start("remote", joined).end()
+    assert [s["name"] for s in b.spans(ctx.trace_id)] == ["remote"]
+    assert b.join(None) is NOOP_TRACE
+
+
+def test_tracer_ring_eviction_and_jsonl_export(tmp_path):
+    tr = Tracer(capacity=4)
+    ctx = tr.new_trace()
+    for i in range(10):
+        tr.start(f"s{i}", ctx).end()
+    spans = tr.spans()
+    assert [s["name"] for s in spans] == ["s6", "s7", "s8", "s9"]
+    p = tmp_path / "spans.jsonl"
+    assert tr.export_jsonl(p) == 4
+    rows = [json.loads(line) for line in p.read_text().splitlines()]
+    assert [r["name"] for r in rows] == ["s6", "s7", "s8", "s9"]
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+
+def test_recorder_ring_order_and_filter():
+    rec = FlightRecorder(capacity=4)
+    for i in range(6):
+        rec.record("tick" if i % 2 else "tock", i=i)
+    evs = rec.events()
+    assert [e["i"] for e in evs] == [2, 3, 4, 5]  # oldest evicted
+    assert [e["seq"] for e in evs] == sorted(e["seq"] for e in evs)
+    assert [e["i"] for e in rec.events("tick")] == [3, 5]
+    assert all(e["node"] == "n0" for e in evs)
+
+
+def test_recorder_trigger_dumps_jsonl(tmp_path):
+    rec = FlightRecorder(dump_dir=tmp_path, node="p")
+    rec.record("admission_reject", reason="queue_full")
+    path = rec.trigger("failover")
+    assert path is not None and path.exists()
+    assert rec.dumps == [path]
+    rows = FlightRecorder.load_jsonl(path)
+    assert rows[0]["kind"] == "admission_reject"
+    assert rows[-1]["kind"] == "dump_trigger"
+    assert rows[-1]["reason"] == "failover"
+
+
+def test_recorder_env_dump_dir(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_FLIGHT_DIR", str(tmp_path / "flight"))
+    rec = FlightRecorder()
+    rec.record("x")
+    assert rec.trigger("t").exists()
+
+
+def test_recorder_disabled_is_inert(tmp_path):
+    rec = FlightRecorder(dump_dir=tmp_path, enabled=False)
+    rec.record("x")
+    assert rec.trigger("t") is None
+    assert rec.events() == [] and rec.dumps == []
+
+
+def test_every_fault_site_triggers_a_flight_dump(tmp_path):
+    """Each armed fault site (including scoped per-replica arms) records a
+    ``fault_fired`` event and auto-dumps the ring."""
+    for i, site in enumerate(ALL_FAULT_SITES):
+        fi = FaultInjector()
+        fi.recorder = FlightRecorder(dump_dir=tmp_path / site, node=site)
+        scoped = site if i % 2 == 0 else f"{site}:replica-1"
+        fi.arm(scoped, mode="raise", times=1)
+        with pytest.raises(InjectedFault):
+            fi.fire(scoped)
+        ev = fi.recorder.events("fault_fired")
+        assert len(ev) == 1 and ev[0]["site"] == scoped
+        trig = fi.recorder.events("dump_trigger")
+        assert trig[0]["reason"] == f"fault:{scoped}"
+        assert len(fi.recorder.dumps) == 1
+        rows = FlightRecorder.load_jsonl(fi.recorder.dumps[0])
+        assert any(r["kind"] == "fault_fired" for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_instruments():
+    reg = Registry()
+    c = reg.counter("requests_total", cls="hot")
+    c.inc()
+    c.inc(2)
+    assert reg.counter("requests_total", cls="hot") is c  # get-or-create
+    g = reg.gauge("queue_depth")
+    g.set(7)
+    h = reg.histogram("latency_s")
+    for v in (0.001, 0.003, 0.2):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["requests_total_cls_hot"] == 3
+    assert snap["queue_depth"] == 7
+    assert snap["latency_s_count"] == 3
+    assert snap["latency_s_sum"] == pytest.approx(0.204)
+    assert 0 < snap["latency_s_p50"] <= snap["latency_s_p99"]
+    with pytest.raises(TypeError):
+        reg.gauge("requests_total", cls="hot")  # kind mismatch
+
+
+def test_registry_prometheus_round_trip():
+    reg = Registry()
+    reg.counter("reqs_total", cls="hot").inc(5)
+    reg.counter("reqs_total", cls="cold").inc(1)
+    reg.gauge("depth").set(3.5)
+    h = reg.histogram("lat_s", cls="hot")
+    for v in (0.0001, 0.004, 0.09, 30.0):
+        h.observe(v)
+    text = reg.to_prometheus_text(include_collected=False)
+    again = parse_prometheus_text(text)
+    # byte-identical round trip: every metric, label set and bucket survives
+    assert again.to_prometheus_text(include_collected=False) == text
+    assert again.snapshot() == reg.snapshot()
+
+
+def test_registry_collect_protocol():
+    reg = Registry()
+    reg.register_collector("serve", lambda: {
+        "completed": 10, "nested": {"a": 1, "b": 2.5}, "name": "skip-me",
+        "flag": True})
+    got = reg.collected()
+    assert got == {"serve_completed": 10, "serve_nested_a": 1,
+                   "serve_nested_b": 2.5, "serve_flag": 1}
+    # re-registering the same prefix replaces (promotion takes over slots)
+    reg.register_collector("serve", lambda: {"completed": 11})
+    assert reg.collected() == {"serve_completed": 11}
+    # a raising collector is dropped, not fatal
+    reg.register_collector("bad", lambda: 1 / 0)
+    assert reg.collected() == {"serve_completed": 11}
+    reg.unregister_collector("serve")
+    reg.unregister_collector("bad")
+    assert reg.collected() == {}
+
+
+def test_flatten_numeric():
+    assert flatten_numeric({"a": 1, "b": {"c": 2.0, "d": {"e": 3}},
+                            "s": "x", "t": True, "l": [1]}) == {
+        "a": 1, "b_c": 2.0, "b_d_e": 3, "t": 1}
+
+
+# ---------------------------------------------------------------------------
+# serve metrics satellites
+# ---------------------------------------------------------------------------
+
+
+def test_sliding_window_percentile_cache_matches_fresh_sort():
+    """The sort cache must be invisible: every percentile read, at every
+    interleaving of records, equals the from-scratch sorted answer."""
+    rng = np.random.default_rng(0)
+    w = SlidingWindow(window=64)
+    for i, v in enumerate(rng.random(200)):
+        w.record(float(v))
+        if i % 7 == 0:
+            for p in (0.0, 50.0, 90.0, 99.0, 100.0):
+                fresh = sorted(w._buf)
+                idx = min(len(fresh) - 1,
+                          max(0, int(round(p / 100.0 * (len(fresh) - 1)))))
+                # read twice: the second hits the cache and must agree
+                assert w.percentile(p) == fresh[idx]
+                assert w.percentile(p) == fresh[idx]
+
+
+def test_serve_metrics_snapshot_is_flat_scalars():
+    m = ServeMetrics(window=16)
+    m.record_batch([0.01, 0.02], [1, 2], False, worker_id=0)
+    m.record_batch([0.03], [3], True, worker_id=2)
+    snap = m.snapshot(field_stats={"halo_ratio": 0.25})
+    for k, v in snap.items():
+        assert not isinstance(v, (dict, list, tuple)), \
+            f"{k} is nested ({type(v).__name__}); the contract is flat"
+    assert snap["completed_by_worker_0"] == 2
+    assert snap["completed_by_worker_2"] == 1
+    assert snap["workers_reporting"] == 2
+    assert snap["halo_ratio"] == 0.25
+    assert "completed_by_worker" not in snap  # the nested dict is gone
+
+
+def test_timer_shim_backed_by_registry():
+    t = Timer()
+    with t.section("load"):
+        pass
+    with t.section("load"):
+        pass
+    with t.section("fit"):
+        pass
+    assert t.counts == {"load": 2, "fit": 1}
+    assert set(t.totals) == {"load", "fit"}
+    assert all(v >= 0 for v in t.totals.values())
+    s = t.summary()
+    assert "load" in s and "fit" in s
+    # the accumulation is registry histograms, not bespoke dicts
+    assert t.registry.histogram("timer_load").count == 2
+
+
+# ---------------------------------------------------------------------------
+# serving loop integration
+# ---------------------------------------------------------------------------
+
+
+def _loop(tmp=None, obs=None, **pol):
+    g = musicbrainz_like(300, seed=7)
+    pol.setdefault("bootstrap_after_ticks", 0)
+    pol.setdefault("cadence", 6)
+    pol.setdefault("min_interval", 0)
+    pol.setdefault("dirty_fraction", 0.02)
+    pol.setdefault("drift_l1", 9e9)
+    pol.setdefault("ipt_regression", 9e9)
+    return ServingLoop(
+        g, 4, taper_config=TaperConfig(max_iterations=2),
+        policy=OnlinePolicy(**pol),
+        config=ServeLoopConfig(
+            micro_batch=8, overlap_invocations=False, obs=obs,
+            snapshot_dir=None if tmp is None else str(tmp)))
+
+
+def _drive(loop, rounds, mutate_every=3):
+    tickets = []
+    for i in range(rounds):
+        t = loop.submit(MQ1 if i % 3 else MQ3)
+        assert t.accepted
+        tickets.append(t)
+        if mutate_every and i % mutate_every == 0:
+            loop.submit_mutations(MutationBatch(add_edges=[(i % 200,
+                                                            (i * 7) % 200)]))
+        loop.pump()
+    while not all(t.done.is_set() for t in tickets):
+        loop.pump()
+
+
+def test_loop_request_and_invocation_traces(tmp_path):
+    obs = Observability(trace_sample_rate=1.0, node="primary")
+    loop = _loop(tmp_path, obs=obs)
+    _drive(loop, rounds=14)
+    assert loop.ot.invocations >= 1
+    tr = obs.tracer
+
+    # every admitted request opened a "request" trace and closed it with
+    # the serve outcome
+    reqs = tr.spans(name="request")
+    assert len(reqs) == 14
+    assert all(r["attrs"]["latency_s"] > 0 for r in reqs)
+    assert all("n_paths" in r["attrs"] for r in reqs)
+    # micro-batch drain spans join the admission-opened traces
+    batches = tr.spans(name="request.batch")
+    assert batches and all(b["trace_id"].startswith("t-primary-")
+                           for b in batches)
+    assert {b["trace_id"] for b in batches} <= {r["trace_id"] for r in reqs}
+
+    # the invocation lifecycle is one forced trace: snapshot → field →
+    # swap → commit, all under the same root
+    inv = [s for s in tr.spans(name="invocation")
+           if s["attrs"].get("committed")]
+    assert inv
+    tid = inv[0]["trace_id"]
+    names = [s["name"] for s in tr.spans(tid)]
+    for stage in ("invocation.snapshot", "invocation.field",
+                  "invocation.swap", "invocation.commit"):
+        assert stage in names, f"{stage} missing from {names}"
+    assert names.index("invocation.snapshot") \
+        < names.index("invocation.commit")
+
+    # ingest groups trace too (journal append → apply → publish)
+    assert tr.spans(name="ingest.group")
+    loop.stop()
+
+
+def test_loop_trace_sample_rate_config_path():
+    loop = _loop(obs=None)
+    assert not loop.obs.enabled  # default: the disabled singleton
+    loop.stop()
+    g = musicbrainz_like(300, seed=7)
+    loop = ServingLoop(
+        g, 4, taper_config=TaperConfig(max_iterations=2),
+        policy=OnlinePolicy(bootstrap_after_ticks=0, cadence=6,
+                            min_interval=0, dirty_fraction=0.02,
+                            drift_l1=9e9, ipt_regression=9e9),
+        config=ServeLoopConfig(micro_batch=8, overlap_invocations=False,
+                               trace_sample_rate=0.25))
+    assert loop.obs.enabled
+    assert loop.obs.tracer.sample_rate == 0.25
+    loop.stop()
+
+
+def test_loop_registers_collectors_and_prom_export(tmp_path):
+    obs = Observability(trace_sample_rate=1.0)
+    loop = _loop(tmp_path, obs=obs)
+    _drive(loop, rounds=8)
+    got = obs.registry.collected()
+    assert any(k.startswith("serve_") for k in got)
+    assert got["executor_enum_calls"] > 0
+    assert got["executor_plans_compiled"] > 0
+    text = obs.registry.to_prometheus_text()
+    assert parse_prometheus_text(
+        obs.registry.to_prometheus_text(include_collected=False)
+    ).to_prometheus_text(include_collected=False) \
+        == obs.registry.to_prometheus_text(include_collected=False)
+    # collected values ride along as untyped gauges in the full export
+    assert "executor_enum_calls" in text
+    loop.stop()
+
+
+def test_loop_fault_site_dump_through_serving_path(tmp_path):
+    """The integration variant of the per-site dump test: a fault fired by
+    the loop's own ingest path dumps the ring with the serving events that
+    led up to it."""
+    fi = FaultInjector()
+    obs = Observability(trace_sample_rate=1.0,
+                        dump_dir=str(tmp_path / "flight"))
+    g = musicbrainz_like(300, seed=7)
+    loop = ServingLoop(
+        g, 4, taper_config=TaperConfig(max_iterations=2),
+        policy=OnlinePolicy(bootstrap_after_ticks=10 ** 9, cadence=10 ** 9,
+                            min_interval=0, dirty_fraction=2.0,
+                            drift_l1=9e9, ipt_regression=9e9),
+        config=ServeLoopConfig(micro_batch=8, overlap_invocations=False,
+                               obs=obs, faults=fi,
+                               snapshot_dir=str(tmp_path / "snap")))
+    fi.arm(SITE_INGEST_GROUP, mode="raise", times=1)
+    loop.submit_mutations(MutationBatch(add_edges=[(1, 2)]))
+    # the loop survives the poisoned group (falls back to per-member
+    # application) — but the recorder captured the firing and dumped
+    loop.pump()
+    assert fi.recorder is obs.recorder  # the loop wired it
+    assert [e["site"] for e in obs.recorder.events("fault_fired")] \
+        == [SITE_INGEST_GROUP]
+    assert len(obs.recorder.dumps) == 1
+    rows = FlightRecorder.load_jsonl(obs.recorder.dumps[0])
+    assert any(r["kind"] == "fault_fired" for r in rows)
+    loop.stop()
+
+
+def test_obs_disabled_leaves_no_trace_state(tmp_path):
+    loop = _loop(tmp_path, obs=None)
+    _drive(loop, rounds=6)
+    assert loop.obs.tracer.spans() == []
+    assert loop.obs.recorder.events() == []
+    loop.stop()

@@ -1,0 +1,202 @@
+"""Cross-node observability: the failover drill must leave ONE trace
+telling the whole story (primary-crash → fence → promotion under epoch 2 →
+first answer) in causal order, follower applies must join shipped trace
+ids, and the failover must auto-dump the flight recorder with the drill's
+event sequence."""
+import time
+
+import numpy as np
+
+from repro.core.online import OnlinePolicy
+from repro.core.rpq import parse_rpq
+from repro.core.taper import TaperConfig
+from repro.graphs.graph import MutationBatch
+from repro.graphs.generators import musicbrainz_like
+from repro.obs import FlightRecorder, Observability
+from repro.serve import (
+    ClusterConfig,
+    ClusterCoordinator,
+    ServeLoopConfig,
+    ServingLoop,
+)
+
+MQ1 = parse_rpq("Area.Artist.(Artist|Label).Area")
+MQ3 = parse_rpq("Artist.Credit.Track.Medium")
+
+
+def _policy():
+    return OnlinePolicy(bootstrap_after_ticks=0, cadence=6, min_interval=0,
+                        dirty_fraction=0.02, drift_l1=9e9,
+                        ipt_regression=9e9)
+
+
+def _cluster(tmp, obs, n_followers=2, **ck):
+    g = musicbrainz_like(400, seed=7)
+    cfg = ServeLoopConfig(micro_batch=8, overlap_invocations=False,
+                          snapshot_dir=str(tmp / "snap"), obs=obs)
+    primary = ServingLoop(g, 4, taper_config=TaperConfig(max_iterations=2),
+                          policy=_policy(), config=cfg)
+    ck.setdefault("heartbeat_timeout_s", 9e9)
+    ccfg = ClusterConfig(n_followers=n_followers, obs=obs, **ck)
+    return ClusterCoordinator(primary, config=ccfg, policy=_policy(),
+                              taper_config=TaperConfig(max_iterations=2))
+
+
+def _drive(coord, rounds, seed=0):
+    rng = np.random.default_rng(seed)
+    n = coord.primary.g.n
+    for i in range(rounds):
+        coord.serve([MQ1 if i % 3 else MQ3], cls="hot")
+        r = rng.random()
+        if r < 0.4:
+            coord.submit_mutations(MutationBatch(
+                add_vertex_labels=[int(rng.integers(0, 4))],
+                add_edges=[(int(rng.integers(0, n)), n)]))
+            n += 1
+        elif r < 0.6:
+            coord.submit_mutations(MutationBatch(
+                add_edges=[(int(rng.integers(0, 400)),
+                            int(rng.integers(0, 400)))]))
+        coord.pump()
+
+
+def test_failover_drill_single_cross_node_trace(tmp_path):
+    """The PR-8 drill, traced: crash the primary, promote, answer a read —
+    and the tracer holds exactly one failover trace whose spans tell that
+    story in causal order, including the follower-side commit apply that
+    joined via the shipped frame's trace id."""
+    obs = Observability(trace_sample_rate=1.0, node="cluster",
+                        dump_dir=str(tmp_path / "flight"))
+    coord = _cluster(tmp_path, obs, heartbeat_timeout_s=0.05)
+    _drive(coord, rounds=18, seed=3)
+    assert coord.primary.ot.invocations > 0  # the drill spans commits
+
+    coord.crash_primary()
+    time.sleep(0.06)
+    coord.pump()
+    assert coord.failovers == 1 and coord.hub.current_epoch == 2
+    coord.serve([MQ3], cls="hot")  # the first post-failover answer
+
+    roots = obs.tracer.spans(name="failover")
+    assert len(roots) == 1, "the drill must open exactly ONE failover trace"
+    tid = roots[0]["trace_id"]
+    spans = obs.tracer.spans(tid)  # sorted by start time = causal order
+    names = [s["name"] for s in spans]
+    by_name = {s["name"]: s for s in spans}
+
+    for expected in ("failover.primary-crash", "failover.fence",
+                     "failover.promotion", "replica.commit",
+                     "failover.first-answer"):
+        assert expected in names, f"{expected} missing from {names}"
+    assert names.index("failover.primary-crash") \
+        < names.index("failover.fence") \
+        < names.index("failover.promotion") \
+        < names.index("failover.first-answer")
+    # the promotion happened under the advanced epoch
+    assert by_name["failover.fence"]["attrs"]["epoch"] == 2
+    assert by_name["failover.promotion"]["attrs"]["epoch"] == 2
+    assert by_name["failover.promotion"]["attrs"]["slot"] \
+        == coord.primary_slot
+    # every span is parented inside the one trace (no orphans)
+    ids = {s["span_id"] for s in spans}
+    root_id = roots[0]["span_id"]
+    for s in spans:
+        assert s["parent_id"] == 0 or s["parent_id"] in ids \
+            or s["parent_id"] == root_id
+    # a second serve does NOT open another first-answer span
+    coord.serve([MQ1], cls="hot")
+    assert len(obs.tracer.spans(tid, name="failover.first-answer")) == 1
+    coord.stop()
+
+
+def test_failover_auto_dumps_flight_recorder(tmp_path):
+    """Failover triggers a flight-recorder dump whose event sequence
+    matches the drill: heartbeat lapse, then promotion, then the dump."""
+    obs = Observability(trace_sample_rate=1.0, node="cluster",
+                        dump_dir=str(tmp_path / "flight"))
+    coord = _cluster(tmp_path, obs, heartbeat_timeout_s=0.05)
+    _drive(coord, rounds=6, seed=5)
+    coord.crash_primary()
+    time.sleep(0.06)
+    coord.pump()
+    assert coord.failovers == 1
+
+    assert len(obs.recorder.dumps) == 1
+    rows = FlightRecorder.load_jsonl(obs.recorder.dumps[0])
+    kinds = [r["kind"] for r in rows]
+    assert "heartbeat_lapse" in kinds and "promotion" in kinds
+    assert kinds.index("heartbeat_lapse") < kinds.index("promotion")
+    assert kinds[-1] == "dump_trigger" and rows[-1]["reason"] == "failover"
+    lapse = next(r for r in rows if r["kind"] == "heartbeat_lapse")
+    assert lapse["silent_s"] >= 0.05 and lapse["slot"] == 0
+    promo = next(r for r in rows if r["kind"] == "promotion")
+    assert promo["epoch"] == 2 and promo["slot"] == coord.primary_slot
+    assert promo["demoted_slot"] == 0
+    coord.stop()
+
+
+def test_follower_applies_join_shipped_group_traces(tmp_path):
+    """Every shipped ingest-group frame carries the originating trace id;
+    the follower's apply span lands in the SAME trace as the primary's
+    ingest.group span — one cross-node causal story per group."""
+    obs = Observability(trace_sample_rate=1.0, node="cluster")
+    coord = _cluster(tmp_path, obs, n_followers=1)
+    for i in range(4):
+        coord.submit_mutations(MutationBatch(add_edges=[(i, i + 1)]))
+        coord.pump()
+    groups = obs.tracer.spans(name="ingest.group")
+    assert groups
+    applies = obs.tracer.spans(name="replica.apply")
+    assert applies
+    group_tids = {s["trace_id"] for s in groups}
+    for a in applies:
+        assert a["trace_id"] in group_tids
+        assert a["attrs"]["replica"] == "replica-1"
+    # seq attrs line up: the follower applied the seqs the primary shipped
+    assert {a["attrs"]["seq"] for a in applies} \
+        <= {g["attrs"]["seq"] for g in groups}
+    coord.stop()
+
+
+def test_cluster_registry_collects_every_component(tmp_path):
+    """One registry pull sees the loop, executor, hub, each follower, the
+    router and the coordinator — and the export parses back."""
+    from repro.obs import parse_prometheus_text
+
+    obs = Observability(trace_sample_rate=1.0, node="cluster")
+    coord = _cluster(tmp_path, obs, n_followers=2)
+    _drive(coord, rounds=8, seed=1)
+    got = obs.registry.collected()
+    for prefix in ("serve_", "executor_", "hub_", "follower_1_",
+                   "follower_2_", "router_", "cluster_"):
+        assert any(k.startswith(prefix) for k in got), \
+            f"no {prefix} keys in collected()"
+    assert got["cluster_n_replicas"] == 3
+    assert got["router_routed"] >= 8
+    # per-SLO-class latency histograms populated by the router
+    hot = obs.registry.histogram("router_latency_s", cls="hot")
+    assert hot.count >= 8
+    text = obs.registry.to_prometheus_text(include_collected=False)
+    assert parse_prometheus_text(text).to_prometheus_text(
+        include_collected=False) == text
+    coord.stop()
+
+
+def test_promoted_loop_takes_over_collector_slots(tmp_path):
+    """After failover the promoted loop replaces the dead primary's
+    ``serve``/``executor`` collectors and the promoted slot's follower
+    collector is retired — the registry keeps exporting live numbers."""
+    obs = Observability(trace_sample_rate=1.0, node="cluster")
+    coord = _cluster(tmp_path, obs, heartbeat_timeout_s=0.05)
+    _drive(coord, rounds=6, seed=2)
+    coord.crash_primary()
+    time.sleep(0.06)
+    coord.pump()
+    assert coord.failovers == 1
+    promoted_slot = coord.primary_slot
+    got = obs.registry.collected()
+    assert not any(k.startswith(f"follower_{promoted_slot}_") for k in got)
+    before = got["serve_completed"]
+    coord.serve([MQ3], cls="hot")
+    assert obs.registry.collected()["serve_completed"] > before
+    coord.stop()

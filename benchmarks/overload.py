@@ -1,0 +1,293 @@
+import sys
+
+_STANDALONE = "jax" not in sys.modules
+
+__doc__ = """Flash-crowd overload: brownout shedding defends the hot SLO.
+
+Acceptance benchmark for the PR-10 control loops.  One serving loop with
+the brownout controller enabled answers four phases of classed traffic:
+
+* **baseline** — hot-only at a sustainable rate; measures the hot
+  throughput and p99 the goodput and SLO gates are scored against;
+* **calibration** — a few rounds at the surge's hot demand (3x), before
+  any budget is armed.  This measures what the *controller's own*
+  bucket-quantile estimator reports for the post-shed steady state, and
+  the budget is then placed so the clear threshold
+  (``clear_ratio * budget``) sits between the baseline estimate and the
+  post-shed estimate.  Calibrating in estimator space matters: the
+  registry histogram's buckets are coarse, so a threshold placed from
+  exact percentiles can land where the estimator cannot discriminate
+  the two states, and the ladder flaps;
+* **flash crowd** — 4x the baseline demand (3x hot + 1x cold per round,
+  arrivals interleaved).  Pre-shed, hot requests queue behind the full
+  crowd and the hot latency breaches the budget, so the controller
+  walks the shed ladder up; at the top the cold class is rejected
+  outright and the hot class gets the capacity back.  The shed state
+  runs *within* the budget but *above* the clear threshold, so the
+  ladder holds stable under the sustained surge instead of flapping
+  cold traffic back in;
+* **recovery** — demand drops back to baseline; the first controller
+  window that observes the drop is all-clear (below the clear
+  threshold), so the ladder steps down and cold admission re-opens.
+
+Controller windows run on an injected clock advanced once per round, so
+window boundaries are load-aligned and deterministic; the latencies in
+the histograms are real measured wall times.
+
+Claims measured (asserted standalone; reported under ``run.py``):
+
+* the surge actually engaged the brownout: shed level rose and cold
+  requests were rejected with ``reason="brownout"``;
+* the hot p99 over the post-shed half of the surge is within the SLO
+  budget — shedding cold bought the hot class its latency back;
+* hot goodput under the surge is >= 0.7x the pre-overload hot
+  throughput (capacity went to hot work, not to a collapse);
+* admission re-opens within one controller window of the load dropping
+  (the first all-clear window steps the ladder down), and the ladder
+  fully re-opens within a few more windows.
+
+Scale via ``REPRO_BENCH_N`` (default 20000 vertices) and
+``REPRO_OVERLOAD_ROUNDS`` (default 16 surge rounds).
+"""
+
+import os
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from benchmarks.common import K, Report, workload_for
+from repro.core.online import OnlinePolicy
+from repro.core.taper import TaperConfig
+from repro.graphs.generators import musicbrainz_like
+from repro.serve.control import ControlConfig, WindowedQuantile
+from repro.serve.loop import ServeLoopConfig, ServingLoop
+from repro.serve.queueing import Rejection
+
+BENCH_N = int(os.environ.get("REPRO_BENCH_N", "20000"))
+# surge rounds: long enough that the steady shed state dominates the
+# few ramp-up rounds the controller needs to walk the ladder up
+ROUNDS = int(os.environ.get("REPRO_OVERLOAD_ROUNDS", "16"))
+#: hot requests per baseline round
+HOT = 16
+SURGE = 4  # flash-crowd multiplier: 3x hot + 1x cold per round
+SURGE_HOT = 3  # hot share of the surge (the rest is cold)
+#: fraction of the clear-threshold -> budget span (budget = thr / ratio)
+CLEAR_RATIO = 0.6
+GOODPUT_FLOOR = 0.7
+MICRO_BATCH = 16
+CALIBRATION_ROUNDS = 4
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _make_loop(n: int, clk: _Clock) -> ServingLoop:
+    ctl = ControlConfig(
+        slo_budget_s={"hot": 9e9},  # armed after the calibration phase
+        window_s=1.0, min_window_samples=8, shed_levels=2,
+        # control on p95, not p99: a window holds only ~16-64 samples, so
+        # its p99 is the single slowest request — one OS hiccup would flap
+        # the ladder.  The p95 estimate is rank-based and stable.
+        breach_quantile=0.95,
+        clear_ratio=CLEAR_RATIO, clear_windows=1, clock=clk)
+    g = musicbrainz_like(n, avg_degree=6.0, seed=13)
+    return ServingLoop(
+        g, K,
+        taper_config=TaperConfig(max_iterations=2),
+        # bootstrap fires during warm-up; the huge cadence keeps the
+        # measured phases invocation-free so they time the serve path
+        policy=OnlinePolicy(bootstrap_after_ticks=0, cadence=10 ** 9,
+                            min_interval=0, dirty_fraction=2.0,
+                            drift_l1=9e9),
+        config=ServeLoopConfig(micro_batch=MICRO_BATCH,
+                               max_queue_depth=SURGE * HOT + 8,
+                               overlap_invocations=False, control=ctl))
+
+
+def _round(loop: ServingLoop, queries, hot: int, cold: int):
+    """Submit one round of classed demand with hot and cold arrivals
+    interleaved (a real crowd is mixed — pre-shed, hot requests queue
+    behind cold ones), drain it, return (hot_tickets, cold_rejected)."""
+    tickets, cold_rej = [], 0
+    total = hot + cold
+    for i in range(total):
+        # spread the hot arrivals evenly through the crowd, so pre-shed
+        # they genuinely queue behind it
+        if (i + 1) * hot // total > i * hot // total:
+            t = loop.submit(queries[i % len(queries)], cls="hot")
+            if not isinstance(t, Rejection):
+                tickets.append(t)
+        else:
+            r = loop.submit(queries[(i + 1) % len(queries)], cls="cold")
+            if isinstance(r, Rejection):
+                cold_rej += 1
+    while loop.requests.depth() > 0:
+        loop.pump()
+    loop.pump()  # controller tick with the drained queue's samples
+    return tickets, cold_rej
+
+
+def run(report: Optional[Report] = None, n: int = BENCH_N) -> Report:
+    report = report or Report()
+    clk = _Clock()
+    loop = _make_loop(n, clk)
+    queries = [q for q, _ in workload_for("musicbrainz")]
+    # shadow estimator over the same histogram the controller reads:
+    # used to measure, per phase, the value the controller will actually
+    # compare against its thresholds
+    shadow = WindowedQuantile(loop._brownout._cw.window("hot").hist)
+
+    def est_round(hot: int, cold: int = 0):
+        shadow.advance()
+        tickets, rej = _round(loop, queries, hot, cold)
+        est = shadow.quantile(loop._brownout.cfg.breach_quantile)
+        clk.advance(1.01)
+        return tickets, rej, est
+
+    try:
+        # warm-up: bootstrap invocation + caches, outside every window.
+        # Several rounds — the first post-bootstrap rounds run measurably
+        # slower than the steady state the budget is calibrated against
+        for _ in range(4):
+            _round(loop, queries, HOT, 0)
+            clk.advance(1.01)
+        loop.pump()
+
+        # -- baseline: hot-only, sustainable ---------------------------------
+        base_lat: List[float] = []
+        base_rounds: List[List[float]] = []
+        base_ests: List[float] = []
+        t0 = time.perf_counter()
+        for _ in range(ROUNDS):
+            tickets, _, est = est_round(HOT)
+            lat = [t.latency_s for t in tickets]
+            base_lat.extend(lat)
+            base_rounds.append(lat)
+            if est is not None:
+                base_ests.append(est)
+        base_wall = time.perf_counter() - t0
+        base_qps = len(base_lat) / max(base_wall, 1e-9)
+        # median across rounds of the per-round p99: robust to the one
+        # slow round an OS hiccup produces, unlike a pooled p99 whose
+        # top-1% IS that round
+        base_p99 = float(np.median(
+            [np.percentile(r, 99) for r in base_rounds]))
+
+        # -- calibration: the post-shed steady state, in estimator space -----
+        # the shed surge serves 3x hot with all cold rejected; measure
+        # what the controller's estimator reports for exactly that load
+        hold_ests: List[float] = []
+        for _ in range(CALIBRATION_ROUNDS):
+            _, _, est = est_round(SURGE_HOT * HOT)
+            if est is not None:
+                hold_ests.append(est)
+        est_base = float(np.median(base_ests))
+        est_hold = float(np.median(hold_ests))
+        # place the clear threshold at the geometric midpoint of the two
+        # states: recovery windows clear it, shed windows hold above it
+        thr = float(np.sqrt(est_base * est_hold))
+        budget = thr / CLEAR_RATIO
+        loop._brownout.set_budget("hot", budget)
+
+        # -- flash crowd: 4x demand, a quarter of it cold --------------------
+        surge_lat: List[List[float]] = []
+        cold_rejected = 0
+        hot_done = 0
+        t0 = time.perf_counter()
+        for _ in range(ROUNDS):
+            tickets, rej, _ = est_round(SURGE_HOT * HOT, (SURGE - SURGE_HOT) * HOT)
+            surge_lat.append([t.latency_s for t in tickets])
+            hot_done += len(tickets)
+            cold_rejected += rej
+        surge_wall = time.perf_counter() - t0
+        goodput = hot_done / max(surge_wall, 1e-9)
+        peak_shed = loop.stats()["shed_level"]
+        shed_raises = loop._brownout.shed_raises
+        # the post-shed steady state: the back half of the surge
+        # (median-of-rounds, same robust estimator as the baseline)
+        late_p99 = float(np.median(
+            [np.percentile(xs, 99) for xs in surge_lat[ROUNDS // 2:]]))
+
+        # -- recovery: load drops; the first all-clear window re-opens -------
+        # two baseline rounds inside one controller window (no clock
+        # advance between them): the first window that observes the drop
+        # holds 2*HOT samples, so one slow request cannot push its
+        # quantile estimate back over the clear threshold
+        _round(loop, queries, HOT, 0)
+        _round(loop, queries, HOT, 0)
+        clk.advance(1.01)
+        loop.pump()  # the tick on the first full post-drop window
+        after_one_window = loop.stats()["shed_level"]
+        reopen_windows = 1
+        while loop.stats()["shed_level"] > 0 and reopen_windows < 8:
+            _round(loop, queries, HOT, 0)
+            _round(loop, queries, HOT, 0)  # same 2-round window as above
+            clk.advance(1.01)
+            loop.pump()
+            reopen_windows += 1
+        cold_ok = not isinstance(loop.submit(queries[0], cls="cold"),
+                                 Rejection)
+
+        ratio = goodput / max(base_qps, 1e-9)
+        report.add(
+            "overload/baseline", 1.0 / max(base_qps, 1e-9),
+            f"n={n} hot_qps={base_qps:.1f} p99={base_p99 * 1e3:.2f}ms "
+            f"budget={budget * 1e3:.2f}ms",
+            {"hot_qps": base_qps, "p99_s": base_p99, "budget_s": budget,
+             "est_base_s": est_base, "est_hold_s": est_hold})
+        report.add(
+            "overload/flash_crowd", 1.0 / max(goodput, 1e-9),
+            f"n={n} goodput={goodput:.1f}/s ratio={ratio:.2f}x "
+            f"target>={GOODPUT_FLOOR}x shed_level={peak_shed} "
+            f"cold_rejected={cold_rejected} "
+            f"late_p99={late_p99 * 1e3:.2f}ms",
+            {"goodput_qps": goodput, "goodput_ratio": ratio,
+             "peak_shed_level": peak_shed, "shed_raises": shed_raises,
+             "cold_rejected": cold_rejected, "late_p99_s": late_p99})
+        report.add(
+            "overload/recovery", 1e-6 * max(reopen_windows, 1),
+            f"n={n} shed_after_one_window={after_one_window} "
+            f"reopen_windows={reopen_windows} cold_admitted={cold_ok}",
+            {"shed_after_one_window": after_one_window,
+             "reopen_windows": reopen_windows,
+             "cold_admitted": int(cold_ok)})
+
+        if _STANDALONE:
+            assert est_hold > est_base, (
+                f"calibration failed: the 3x-hot state "
+                f"({est_hold * 1e3:.2f}ms) is not separable from the "
+                f"baseline ({est_base * 1e3:.2f}ms) in estimator space")
+            assert shed_raises >= 1 and peak_shed >= 1, (
+                "the 4x surge never engaged the brownout controller")
+            assert cold_rejected > 0, (
+                "brownout engaged but no cold request was shed")
+            assert late_p99 <= budget, (
+                f"hot p99 {late_p99 * 1e3:.2f}ms still over the "
+                f"{budget * 1e3:.2f}ms budget in the post-shed steady "
+                "state — shedding did not defend the SLO")
+            assert ratio >= GOODPUT_FLOOR, (
+                f"hot goodput collapsed under the surge: {goodput:.1f}/s "
+                f"vs {base_qps:.1f}/s baseline ({ratio:.2f}x < "
+                f"{GOODPUT_FLOOR}x)")
+            assert after_one_window < peak_shed, (
+                "admission did not start re-opening within one controller "
+                f"window of the load dropping (level {after_one_window})")
+            assert loop.stats()["shed_level"] == 0 and cold_ok, (
+                f"admission never fully re-opened "
+                f"({reopen_windows} windows)")
+    finally:
+        loop.stop()
+    return report
+
+
+if __name__ == "__main__":
+    run().emit()

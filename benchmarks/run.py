@@ -44,6 +44,9 @@ CORE = [
     # observability overhead: traced vs untraced serving throughput
     # (<=5% gated standalone), trace_sample_rate=0 ~free
     "obs_overhead",
+    # closed-loop overload protection: flash-crowd brownout shedding
+    # defends the hot-class SLO, goodput floor + hysteretic recovery
+    "overload",
 ]
 
 # integration benchmarks: skipped (by name) only when a genuinely optional

@@ -78,6 +78,20 @@ class OnlinePolicy:
     #: (Deliberately tick-based and named differently from the serving
     #: config's request-based knob.)
     bootstrap_after_ticks: Optional[int] = None
+    #: serve-pressure coupling (``serve.control``): when the caller passes
+    #: a [0, 1] pressure signal to :meth:`OnlineTaper.poll`, an invocation
+    #: is *deferred* (trigger suppressed, counted in
+    #: ``pressure_deferrals``) at pressure >= ``defer_above_pressure`` —
+    #: an overloaded loop cannot afford the enhancement's wall cost — and
+    #: the ipt-regression threshold is *relaxed* toward 1 by
+    #: ``accel_factor`` at pressure <= ``accelerate_below_pressure`` (idle
+    #: capacity is the cheapest time to repartition).  ``None`` (default)
+    #: disables each coupling; with no pressure passed behaviour is
+    #: exactly the historic policy.
+    defer_above_pressure: Optional[float] = None
+    accelerate_below_pressure: Optional[float] = None
+    #: relaxed regression threshold = 1 + (ipt_regression - 1) * accel_factor
+    accel_factor: float = 0.5
 
 
 @dataclass
@@ -152,6 +166,8 @@ class OnlineTaper:
         self._freqs_at_invoke: Dict[str, float] = {}
         self._ipt_at_invoke: Optional[float] = None
         self._last_total_moves: Optional[int] = None
+        #: invocations the policy wanted but serve pressure deferred
+        self.pressure_deferrals = 0
         #: snapshot-restored traversal prior for arrival placement: a fresh
         #: process has no field memo yet, but bitwise recovery parity needs
         #: replayed placements to see the same ``Pr`` the crashed node used
@@ -265,11 +281,29 @@ class OnlineTaper:
             for h in keys)
 
     # -- the policy loop ------------------------------------------------------
-    def _decide(self, measured_ipt: Optional[float]) -> Optional[str]:
+    def _decide(self, measured_ipt: Optional[float],
+                pressure: Optional[float] = None) -> Optional[str]:
         pol = self.policy
         since = self.tick - self._last_invoke_tick
         if since < pol.min_interval:
             return None
+        reason = self._trigger(measured_ipt, pressure)
+        if (reason is not None and pressure is not None
+                and pol.defer_above_pressure is not None
+                and pressure >= pol.defer_above_pressure):
+            # overload: the loop cannot afford the enhancement's wall cost
+            # right now; the trigger condition persists, so the invocation
+            # fires as soon as pressure drops back below the gate
+            self.pressure_deferrals += 1
+            log.info("invocation (%s) deferred: serve pressure %.2f >= %.2f",
+                     reason, pressure, pol.defer_above_pressure)
+            return None
+        return reason
+
+    def _trigger(self, measured_ipt: Optional[float],
+                 pressure: Optional[float]) -> Optional[str]:
+        pol = self.policy
+        since = self.tick - self._last_invoke_tick
         if (self.invocations == 0 and pol.bootstrap_after_ticks is not None
                 and self.tick >= pol.bootstrap_after_ticks):
             return "bootstrap"
@@ -282,9 +316,15 @@ class OnlineTaper:
         freqs = self.sketch.frequencies(pol.min_freq) if self.invocations else {}
         if freqs and self.workload_drift(freqs) >= pol.drift_l1:
             return "workload"
+        ipt_threshold = pol.ipt_regression
+        if (pressure is not None and pol.accelerate_below_pressure is not None
+                and pressure <= pol.accelerate_below_pressure):
+            # idle capacity: relax the regression threshold toward 1 so a
+            # smaller ipt regression justifies spending the invocation now
+            ipt_threshold = 1.0 + (pol.ipt_regression - 1.0) * pol.accel_factor
         if (measured_ipt is not None and self._ipt_at_invoke is not None
                 and self._ipt_at_invoke > 0
-                and measured_ipt / self._ipt_at_invoke >= pol.ipt_regression
+                and measured_ipt / self._ipt_at_invoke >= ipt_threshold
                 and self._migration_worthwhile(measured_ipt)):
             return "ipt"
         if since >= pol.cadence:
@@ -321,18 +361,24 @@ class OnlineTaper:
             return True
         return projected_gain / mb >= threshold
 
-    def poll(self, measured_ipt: Optional[float] = None) -> Optional[str]:
+    def poll(self, measured_ipt: Optional[float] = None,
+             pressure: Optional[float] = None) -> Optional[str]:
         """Advance one tick and return the policy's trigger reason *without*
         invoking — the decide-only half of :meth:`step`, for serving loops
         that run the invocation themselves (overlapped on another thread
-        via :meth:`begin_invocation` / :meth:`commit_invocation`)."""
+        via :meth:`begin_invocation` / :meth:`commit_invocation`).
+
+        ``pressure`` is the serving loop's [0, 1] overload signal
+        (``serve.control.serve_pressure``): high pressure defers the
+        invocation, low pressure relaxes the ipt-regression threshold
+        (see :class:`OnlinePolicy`)."""
         self.tick += 1
         if (measured_ipt is not None and self._ipt_at_invoke is None
                 and self.invocations):
             # first measurement after an invocation becomes the regression
             # baseline (the pre-invocation measure would never trigger)
             self._ipt_at_invoke = measured_ipt
-        return self._decide(measured_ipt)
+        return self._decide(measured_ipt, pressure)
 
     def step(self, measured_ipt: Optional[float] = None) -> OnlineStepReport:
         """Advance one tick and invoke TAPER if the policy says so.

@@ -1,5 +1,20 @@
 from repro.obs import FlightRecorder, Observability, Registry, Tracer
+from repro.serve.chaos import (
+    ChaosHarness,
+    ChaosReport,
+    Scenario,
+    run_scenario,
+    scenario,
+)
 from repro.serve.cluster import ClusterConfig, ClusterCoordinator, ClusterRouter
+from repro.serve.control import (
+    Breaker,
+    BrownoutController,
+    ControlConfig,
+    HedgeController,
+    WindowedQuantile,
+    serve_pressure,
+)
 from repro.serve.engine import GraphQueryEngine, RequestResult, ServeConfig
 from repro.serve.faults import (
     FaultInjector,
@@ -30,9 +45,20 @@ from repro.serve.snapshot import (
 )
 
 __all__ = [
+    "Breaker",
+    "BrownoutController",
+    "ChaosHarness",
+    "ChaosReport",
     "ClusterConfig",
     "ClusterCoordinator",
     "ClusterRouter",
+    "ControlConfig",
+    "HedgeController",
+    "Scenario",
+    "WindowedQuantile",
+    "run_scenario",
+    "scenario",
+    "serve_pressure",
     "FaultInjector",
     "FaultSpec",
     "FencedWrite",

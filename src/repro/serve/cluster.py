@@ -48,7 +48,9 @@ import numpy as np
 
 from repro.graphs.sharded_packing import majority_owner, shard_assignment
 from repro.obs import Observability
+from repro.obs.registry import Registry
 from repro.obs.trace import NOOP_SPAN, NOOP_TRACE
+from repro.serve.control import Breaker, ControlConfig, HedgeController
 from repro.serve.faults import FaultInjector, InjectedFault
 from repro.serve.loop import ServingLoop
 from repro.serve.replication import FollowerReplica, ReplicationHub
@@ -82,6 +84,12 @@ class ClusterConfig:
     #: defaults to the primary loop's bundle so cluster spans and the
     #: loop's invocation spans land in one place
     obs: Optional[Observability] = None
+    # -- control loops (PR 10) -------------------------------------------------
+    #: closed-loop serving protection (``serve.control``): per-follower
+    #: serve breakers, breaker-gated ship channels, and adaptive hedge
+    #: deadlines from the live ``router_latency_s`` quantiles (clamped to
+    #: ``slo_budget_s``).  None keeps the static PR-8 behaviour exactly.
+    control: Optional[ControlConfig] = None
 
 
 class ClusterRouter:
@@ -100,6 +108,20 @@ class ClusterRouter:
         self.cross_replica_ipt = 0.0
         #: per-SLO-class latency histograms, lazily bound to the registry
         self._lat_hists: Dict[str, Any] = {}
+        # -- control loops (PR 10; all None/zero without a ControlConfig) ------
+        ctl = coord.cfg.control
+        #: histogram home: the shared registry when observability is on; a
+        #: private one when only the control loops need the latencies (the
+        #: shared disabled bundle's registry must never be written to)
+        self._reg = (coord.obs.registry if coord.obs.enabled
+                     else (Registry() if ctl is not None else None))
+        #: adaptive hedge deadlines over the live per-class quantiles
+        self._hedge = (HedgeController(self._reg, ctl)
+                       if ctl is not None else None)
+        #: per-follower-slot serve breakers (lazily bound)
+        self._breakers: Dict[int, Breaker] = {}
+        self.breaker_redirects = 0
+        self.hedges_suppressed = 0
 
     def owners(self) -> np.ndarray:
         """Per-vertex owning replica slot under the current primary
@@ -121,15 +143,40 @@ class ClusterRouter:
         starts = np.nonzero(np.isin(g.labels, plan.first_labels))[0]
         return majority_owner(self.owners(), starts)
 
+    def _breaker_for(self, slot: int) -> Optional[Breaker]:
+        """This follower slot's serve breaker (None without control)."""
+        ctl = self.coord.cfg.control
+        if ctl is None:
+            return None
+        b = self._breakers.get(slot)
+        if b is None:
+            coord = self.coord
+            b = self._breakers[slot] = Breaker(
+                f"follower-{slot}",
+                window=ctl.breaker_window,
+                min_failures=ctl.breaker_min_failures,
+                error_rate=ctl.breaker_error_rate,
+                cooldown_s=ctl.breaker_cooldown_s,
+                recorder=(coord.obs.recorder if coord.obs.enabled else None),
+                clock=ctl.resolved_clock())
+        return b
+
     def _usable(self, slot: int, cls: str) -> int:
-        """Gate the routed slot on liveness and the class staleness bound;
-        falls back to the primary when the owner cannot serve in-bound."""
+        """Gate the routed slot on liveness, its serve breaker and the
+        class staleness bound; falls back to the primary when the owner
+        cannot serve in-bound."""
         coord = self.coord
         if slot == coord.primary_slot:
             return slot
         f = coord.followers.get(slot)
         if f is None or not f.alive:
             self.dead_redirects += 1
+            return coord.primary_slot
+        b = self._breaker_for(slot)
+        if b is not None and not b.allow():
+            # open breaker: route around the failing replica entirely (no
+            # staleness probe either — that would also touch it)
+            self.breaker_redirects += 1
             return coord.primary_slot
         bound = coord.cfg.max_staleness_versions.get(
             cls, max(coord.cfg.max_staleness_versions.values(), default=0))
@@ -142,18 +189,27 @@ class ClusterRouter:
 
     def _alternate(self, slot: int, cls: str) -> Optional[int]:
         """Hedge target: the primary when the slow read was on a follower,
-        else the freshest in-bound follower."""
+        else the freshest in-bound follower whose breaker admits traffic —
+        hedging into an open breaker would just double the failure."""
         coord = self.coord
         if slot != coord.primary_slot:
             return coord.primary_slot
         bound = coord.cfg.max_staleness_versions.get(
             cls, max(coord.cfg.max_staleness_versions.values(), default=0))
         best: Optional[int] = None
+        breaker_skips = 0
         for s, f in coord.followers.items():
-            if (f.alive and f.version_lag <= bound
-                    and (best is None or f.applied_seq
-                         > coord.followers[best].applied_seq)):
+            if not f.alive or f.version_lag > bound:
+                continue
+            b = self._breaker_for(s)
+            if b is not None and not b.allow():
+                breaker_skips += 1
+                continue
+            if (best is None
+                    or f.applied_seq > coord.followers[best].applied_seq):
                 best = s
+        if best is None and breaker_skips:
+            self.hedges_suppressed += 1
         return best
 
     def _serve_slot(self, slot: int, queries: Sequence,
@@ -194,27 +250,44 @@ class ClusterRouter:
         out: List = [None] * len(queries)
         lats: List[float] = [0.0] * len(queries)
         budget = cfg.slo_budget_s.get(cls)
+        # adaptive hedging: the deadline tracks the class's live latency
+        # quantile, clamped into [hedge_floor_s, budget] — without control
+        # loops it is exactly the static budget
+        deadline = (self._hedge.deadline(cls, budget)
+                    if self._hedge is not None else budget)
         for slot, idxs in by_slot.items():
             qs = [queries[i] for i in idxs]
+            b = (self._breaker_for(slot)
+                 if slot != coord.primary_slot else None)
             try:
                 res, dt = self._serve_slot(slot, qs, max_results)
+                if b is not None:
+                    b.record_success()
             except (InjectedFault, RuntimeError):
                 if slot == coord.primary_slot:
                     raise
+                if b is not None:
+                    b.record_failure()
                 self.read_failovers += 1
                 res, dt = self._serve_slot(coord.primary_slot, qs,
                                            max_results)
             per = dt / max(len(qs), 1)
-            if cfg.hedging and budget is not None and per > budget:
+            if cfg.hedging and deadline is not None and per > deadline:
                 alt = self._alternate(slot, cls)
                 if alt is not None and alt != slot:
+                    ab = (self._breaker_for(alt)
+                          if alt != coord.primary_slot else None)
                     try:
                         res2, dt2 = self._serve_slot(alt, qs, max_results)
+                        if ab is not None:
+                            ab.record_success()
                         self.hedged_requests += len(qs)
                         if dt2 < dt:
                             res, per = res2, dt2 / max(len(qs), 1)
                     except (InjectedFault, RuntimeError):
-                        pass  # the hedge failing leaves the first answer
+                        if ab is not None:
+                            ab.record_failure()
+                        # the hedge failing leaves the first answer
             for i, r in zip(idxs, res):
                 out[i] = r
                 lats[i] = per
@@ -226,10 +299,10 @@ class ClusterRouter:
                     self.cross_replica_ipt += float((ov[1:] != ov[:-1]).sum())
         coord.primary.observe_served(
             list(queries), [ipt for _, ipt in out], latencies=lats)
-        if coord.obs.enabled:
+        if self._reg is not None:
             h = self._lat_hists.get(cls)
             if h is None:
-                h = self._lat_hists[cls] = coord.obs.registry.histogram(
+                h = self._lat_hists[cls] = self._reg.histogram(
                     "router_latency_s", cls=cls)
             for lat in lats:
                 h.observe(lat)
@@ -246,6 +319,11 @@ class ClusterRouter:
             "dead_redirects": self.dead_redirects,
             "read_failovers": self.read_failovers,
             "cross_replica_ipt": self.cross_replica_ipt,
+            "breaker_redirects": self.breaker_redirects,
+            "hedges_suppressed": self.hedges_suppressed,
+            "breaker_trips": sum(b.trips for b in self._breakers.values()),
+            "breakers_open": sum(1 for b in self._breakers.values()
+                                 if b.state != "closed"),
         }
 
     def collect(self) -> Dict[str, Any]:
@@ -292,6 +370,7 @@ class ClusterCoordinator:
                 self.hub, f"replica-{slot}", self.directory,
                 taper_config=self._taper_config, policy=self._policy,
                 resync_after_polls=self.cfg.resync_after_polls)
+            self._wire_channel_breaker(self.followers[slot])
         self.router = ClusterRouter(self)
         self.failovers = 0
         self.rejoins = 0
@@ -307,6 +386,23 @@ class ClusterCoordinator:
             self.obs.registry.register_collector("router",
                                                  self.router.collect)
             self.obs.registry.register_collector("hub", self.hub.collect)
+
+    def _wire_channel_breaker(self, follower: FollowerReplica) -> None:
+        """Breaker-gate this follower's ship channel (control loops only):
+        an open link fast-fails sends instead of feeding a blackhole; the
+        follower's tail resync repairs the gap after the half-open probe
+        succeeds."""
+        ctl = self.cfg.control
+        if ctl is None:
+            return
+        follower.channel.breaker = Breaker(
+            f"ship-{follower.name}",
+            window=ctl.breaker_window,
+            min_failures=ctl.breaker_min_failures,
+            error_rate=ctl.breaker_error_rate,
+            cooldown_s=ctl.breaker_cooldown_s,
+            recorder=(self.obs.recorder if self.obs.enabled else None),
+            clock=ctl.resolved_clock())
 
     def _wire_obs(self, follower: FollowerReplica, slot: int) -> None:
         """Hand the shared tracer/recorder to a follower so its applies
@@ -509,6 +605,7 @@ class ClusterCoordinator:
                 resync_after_polls=self.cfg.resync_after_polls)
         self.followers[slot] = f
         self.rejoins += 1
+        self._wire_channel_breaker(f)
         if self.obs.enabled:
             self._wire_obs(f, slot)
         self.obs.recorder.record("rejoin", slot=slot,

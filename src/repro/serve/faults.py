@@ -58,6 +58,15 @@ SITE_LINK_PARTITION = "link_partition"
 SITE_REPLICA_APPLY = "replica_apply"
 SITE_REPLICA_SERVE = "replica_serve"
 
+#: every site the serving stack fires.  ``arm()`` validates against this
+#: registry: a typo'd site would otherwise never fire and the test that
+#: armed it would pass vacuously.
+KNOWN_SITES = frozenset({
+    SITE_INVOCATION, SITE_SHARD_UPLOAD, SITE_INGEST_GROUP,
+    SITE_SHIP_DROP, SITE_SHIP_DELAY, SITE_SHIP_REORDER,
+    SITE_LINK_PARTITION, SITE_REPLICA_APPLY, SITE_REPLICA_SERVE,
+})
+
 
 class InjectedFault(RuntimeError):
     """Raised by an armed ``mode="raise"`` fault site."""
@@ -97,7 +106,16 @@ class FaultInjector:
     def arm(self, site: str, mode: str = "raise", times: int = 1,
             delay_s: float = 0.0,
             exc: Type[BaseException] = InjectedFault) -> None:
-        """Arm ``site`` to fault on its next ``times`` firings."""
+        """Arm ``site`` to fault on its next ``times`` firings.
+
+        The site's bare name (before any ``:<follower>`` qualifier) must
+        be in :data:`KNOWN_SITES` — a typo'd site never fires, so the
+        test that armed it would pass vacuously."""
+        base = site.split(":", 1)[0]
+        if base not in KNOWN_SITES:
+            raise ValueError(
+                f"unknown fault site {site!r}; valid sites: "
+                f"{', '.join(sorted(KNOWN_SITES))}")
         spec = FaultSpec(mode=mode, times=times, delay_s=delay_s, exc=exc)
         with self._lock:
             self._armed[site] = spec

@@ -53,12 +53,15 @@ lifecycle diagram):
   invocations stay gated until the zombie thread actually exits (the
   enhancement ran against the live graph, which must stay immutable under
   it), while request serving continues on the old partition throughout;
-* **backend ladder** — ``backend_fallback_after`` consecutive invocation
-  failures walk ``field_backend`` one rung down
-  ``FIELD_BACKEND_LADDER`` (``pallas_sharded → pallas → jnp``: lose scale,
-  keep availability); after ``backend_probe_after`` healthy commits the
-  loop probes one rung back up, doubling the dwell after each failed probe
-  so a flapping device converges to its stable rung;
+* **backend ladder** — invocation failures feed a circuit breaker
+  (``serve.control.Breaker``) whose trip — ``backend_fallback_after``
+  failures in its window at the configured error rate, or that many
+  consecutive failures (the historic strike count as the degenerate
+  case) — walks ``field_backend`` one rung down ``FIELD_BACKEND_LADDER``
+  (``pallas_sharded → pallas → jnp``: lose scale, keep availability);
+  after ``backend_probe_after`` healthy commits the loop probes one rung
+  back up, doubling the dwell after each failed probe so a flapping
+  device converges to its stable rung;
 * **fault injection** — a :class:`~repro.serve.faults.FaultInjector`
   (``ServeLoopConfig.faults``) arms the loop's named fault sites
   (invocation body, shard upload, coalesced ingest group) so tests and
@@ -87,7 +90,14 @@ from repro.serve.faults import (
     SITE_SHARD_UPLOAD,
 )
 from repro.obs import Observability
+from repro.obs.registry import Registry
 from repro.obs.trace import NOOP_SPAN, NOOP_TRACE
+from repro.serve.control import (
+    Breaker,
+    BrownoutController,
+    ControlConfig,
+    serve_pressure,
+)
 from repro.serve.ingest import IngestQueue
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queueing import Rejection, RequestQueue, ServeTicket
@@ -161,6 +171,14 @@ class ServeLoopConfig:
     #: request-trace sampling rate used when ``obs`` is not given
     #: (1.0 = every request, 0.0 = observability off)
     trace_sample_rate: float = 0.0
+    # -- control loops (PR 10) -------------------------------------------------
+    #: closed-loop overload protection (``serve.control``): brownout
+    #: admission over live per-class latency quantiles, pressure-aware
+    #: invocation cadence, and rate-based backend-breaker tuning.  None
+    #: (the default) keeps the static thresholds — no control loops run,
+    #: though the backend ladder still trips through a :class:`Breaker`
+    #: whose parameters degenerate to the historic strike count.
+    control: Optional[ControlConfig] = None
 
 
 class ServingLoop:
@@ -290,6 +308,37 @@ class ServingLoop:
             self.obs.registry.register_collector("serve", self.collect)
             self.obs.registry.register_collector(
                 "executor", self.executor.collect)
+        # -- control loops (PR 10) ---------------------------------------------
+        ctl = self.cfg.control
+        clock = ctl.resolved_clock() if ctl is not None else time.monotonic
+        #: the backend ladder's trip decision: error-rate-over-window with
+        #: a consecutive-failure tail clause, so the historic
+        #: ``backend_fallback_after`` strike count is the degenerate case
+        self._backend_breaker = Breaker(
+            "backend_ladder",
+            window=max(ctl.breaker_window if ctl is not None else 16,
+                       2 * self.cfg.backend_fallback_after),
+            min_failures=self.cfg.backend_fallback_after,
+            error_rate=(ctl.breaker_error_rate if ctl is not None else 0.5),
+            recorder=(self.obs.recorder if self._obs_on else None),
+            clock=clock)
+        self._brownout: Optional[BrownoutController] = None
+        self._ctl_registry: Optional[Registry] = None
+        #: per-class request-latency histograms the brownout controller
+        #: reads (lazily bound; only populated when control is configured)
+        self._lat_hists: Dict[str, object] = {}
+        #: EWMA of committed invocation wall time — the pressure signal's
+        #: "traced invocation latency" input
+        self._inv_wall_ewma = 0.0
+        if ctl is not None:
+            # brownout needs real histograms even when tracing is off; the
+            # shared disabled bundle's registry must never be written to,
+            # so an un-observed loop gets a private one
+            self._ctl_registry = (self.obs.registry if self._obs_on
+                                  else Registry())
+            self._brownout = BrownoutController(
+                self.requests, self._ctl_registry, ctl,
+                recorder=(self.obs.recorder if self._obs_on else None))
 
     def collect(self) -> Dict[str, float]:
         """Metrics-registry collector: the loop's full SLO snapshot (the
@@ -313,9 +362,12 @@ class ServingLoop:
         """The live partition vector (atomically rebound on commit)."""
         return self.ot.part
 
-    def submit(self, query: RPQ) -> Union[ServeTicket, Rejection]:
-        """Admit one request (any thread); see ``RequestQueue.submit``."""
-        return self.requests.submit(query)
+    def submit(self, query: RPQ,
+               cls: str = "hot") -> Union[ServeTicket, Rejection]:
+        """Admit one request (any thread); see ``RequestQueue.submit``.
+        ``cls`` is the request's SLO class (brownout shedding + per-class
+        latency budgets when control loops are configured)."""
+        return self.requests.submit(query, cls=cls)
 
     def submit_mutations(self, batch: MutationBatch) -> Union[bool, Rejection]:
         """Queue one topology delta (any thread); applied by the worker
@@ -422,7 +474,18 @@ class ServingLoop:
         if self._snapshotter is not None:
             rep["snapshot_capture_s"] = self._snapshotter.last_capture_s
             rep["snapshot_publish_s"] = self._snapshotter.last_wall_s
+        extra: Dict[str, object] = {}
+        if self.cfg.control is not None:
+            extra = {
+                "shed_level": self.requests.shed_level,
+                "rejected_brownout": self.requests.rejected_brownout,
+                "serve_pressure": self._serve_pressure(),
+                "pressure_deferrals": self.ot.pressure_deferrals,
+                "backend_breaker_state": self._backend_breaker.state,
+                "backend_breaker_trips": self._backend_breaker.trips,
+            }
         return self.metrics.snapshot(
+            extra=extra,
             queue_depth=self.requests.depth(),
             ingest_depth=self.ingest.depth(),
             rejected_requests=self.requests.rejected,
@@ -651,6 +714,10 @@ class ServingLoop:
             self._serve_batch(batch)
             if allow_trigger:
                 self._maybe_trigger()
+        if self._brownout is not None:
+            # one controller window per elapsed window_s: reads the live
+            # per-class latency quantiles, moves the queue's shed level
+            self._brownout.maybe_tick()
         self._commit_if_done()
         if (self._snapshotter is not None
                 and self.cfg.snapshot_every_s is not None
@@ -690,6 +757,15 @@ class ServingLoop:
                        frontier_rows=enum_stats.get("frontier_rows", 0))
         for ticket, (paths, crossings) in zip(batch, results):
             ticket.complete(paths, crossings)
+        if self._ctl_registry is not None:
+            # per-class latency histograms: what the brownout controller's
+            # windowed quantile estimator reads each controller window
+            for t in batch:
+                h = self._lat_hists.get(t.cls)
+                if h is None:
+                    h = self._lat_hists[t.cls] = self._ctl_registry.histogram(
+                        "request_latency_s", cls=t.cls)
+                h.observe(t.latency_s)
         self.requests.record_service_time(dt / len(batch))
         self.metrics.record_batch(
             [t.latency_s for t in batch], [t.ipt for t in batch], overlapped,
@@ -708,11 +784,27 @@ class ServingLoop:
                               else 0.8 * self._ipt_ewma + 0.2 * mean_ipt)
 
     # -- invocation scheduling ------------------------------------------------
+    def _serve_pressure(self) -> float:
+        """The loop's [0, 1] overload signal (``serve.control``): queue
+        fullness + brownout shed depth + invocation wall cost relative to
+        the watchdog budget."""
+        ctl = self.cfg.control
+        depth_frac = self.requests.depth() / max(self.requests.max_depth, 1)
+        shed_frac = (self.requests.shed_level
+                     / max(self.requests.max_shed_level, 1))
+        inv_frac = 0.0
+        if self.cfg.invocation_timeout_s:
+            inv_frac = min(
+                1.0, self._inv_wall_ewma / self.cfg.invocation_timeout_s)
+        return serve_pressure(depth_frac, shed_frac, inv_frac, ctl)
+
     def _maybe_trigger(self) -> None:
+        pressure = (self._serve_pressure()
+                    if self.cfg.control is not None else None)
         with self._observe_lock:
             # one tick per micro-batch; the sketch is concurrently written
             # by secondary workers' observe()
-            reason = self.ot.poll(self._ipt_ewma)
+            reason = self.ot.poll(self._ipt_ewma, pressure=pressure)
         if reason is None or self._pending is not None:
             return
         if self._zombies_active():
@@ -787,6 +879,7 @@ class ServingLoop:
                 with self._quiesced():
                     self.ot.commit_invocation(pending)
             self.metrics.record_invocation(wall, overlapped=False)
+            self._inv_wall_ewma = 0.7 * self._inv_wall_ewma + 0.3 * wall
             self._requests_since_invocation = 0
             self._note_invocation_success()
             self._warm_devices()
@@ -836,6 +929,7 @@ class ServingLoop:
                     with self._quiesced():
                         self.ot.commit_invocation(self._pending)
                 self.metrics.record_invocation(wall, overlapped=True)
+                self._inv_wall_ewma = 0.7 * self._inv_wall_ewma + 0.3 * wall
                 committed = True
             else:
                 fenced = True
@@ -904,12 +998,18 @@ class ServingLoop:
 
     # -- degradation ladder ---------------------------------------------------
     def _note_invocation_failure(self) -> None:
+        # the consecutive count only drives the retry backoff now; the
+        # demotion decision belongs to the breaker (rate-over-window with
+        # a consecutive-tail clause — see ServeLoopConfig.control)
         self._consec_invocation_failures += 1
         backoff = (self.cfg.invocation_retry_backoff_s
                    * 2 ** (self._consec_invocation_failures - 1))
         self._backoff_until = time.monotonic() + backoff
-        if self._consec_invocation_failures >= self.cfg.backend_fallback_after:
+        if self._backend_breaker.record_failure():
             self._fall_back_backend()
+            # each rung starts with a clean window: failures that demoted
+            # off the old rung are not evidence against the new one
+            self._backend_breaker.reset()
 
     def _fall_back_backend(self) -> None:
         cur = self.ot.taper.config.field_backend
@@ -933,6 +1033,7 @@ class ServingLoop:
     def _note_invocation_success(self) -> None:
         self._consec_invocation_failures = 0
         self._backoff_until = 0.0
+        self._backend_breaker.record_success()
         cur = self.ot.taper.config.field_backend
         if cur == self._base_backend:
             self._probe_after = self.cfg.backend_probe_after

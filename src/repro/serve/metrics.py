@@ -159,8 +159,13 @@ class ServeMetrics:
                  fenced_writes: int = 0, fencing_rejections: int = 0,
                  last_stale_epoch: int = -1, fence_error: str = "",
                  snapshot_capture_s: float = 0.0,
-                 snapshot_publish_s: float = 0.0) -> Dict[str, float]:
+                 snapshot_publish_s: float = 0.0,
+                 extra: Optional[Dict] = None) -> Dict[str, float]:
         """Flat dict of the current SLO picture (plain python scalars).
+
+        ``extra`` merges caller-provided scalars (the control loops' shed
+        level, serve pressure, breaker states) into the flat dict last, so
+        new control-plane keys never require a signature change here.
 
         ``field_stats`` is the sharded field's last measured exchange
         footprint (``pre["_halo_stats"]``): the halo bytes moved per depth
@@ -246,4 +251,5 @@ class ServeMetrics:
                 # capture = copying host state, publish = background write
                 "snapshot_capture_s": snapshot_capture_s,
                 "snapshot_publish_s": snapshot_publish_s,
+                **(extra or {}),
             }

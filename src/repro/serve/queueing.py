@@ -21,6 +21,16 @@ to come back sooner, cold ones later, so the retry traffic itself arrives
 pre-sorted by admission priority.  Without the hook behaviour is exactly
 the unweighted PR-4 queue.
 
+**Brownout shedding.**  The queue also carries a controller-driven *shed
+level* (``serve.control.BrownoutController`` owns it; the queue itself
+never changes it).  Each request declares an SLO class (``cls=``,
+default ``"hot"``); at shed level ``L`` of ``max_shed_level``, classes in
+``shed_classes`` see their admission zone shrink to the bottom
+``1 - L/max_shed_level`` of the queue — and at the top level they are
+rejected outright — with a ``"brownout"`` rejection whose retry hint is
+stretched by ``1 + L``, so shed traffic backs off harder the deeper the
+brownout.  Level 0 (the default) is byte-identical to the un-shed queue.
+
 The serving loop drains requests in *micro-batches*
 (:meth:`RequestQueue.take_batch`): up to ``max_batch`` requests leave
 together so the executor can share per-query enumeration work across the
@@ -60,6 +70,8 @@ class ServeTicket:
 
     query: RPQ
     submitted_s: float
+    #: SLO class declared at submit (brownout shedding + per-class SLOs)
+    cls: str = "hot"
     done: threading.Event = field(default_factory=threading.Event)
     paths: Optional[List[Tuple[int, ...]]] = None
     ipt: int = 0
@@ -113,9 +125,16 @@ class RequestQueue:
         # EWMA of admitted weights = the hot/cold watershed; starts at 0 so
         # an unwarmed sketch (every weight 0) treats all queries as hot
         self._weight_ewma = 0.0
+        #: brownout ladder (owned by ``serve.control.BrownoutController``):
+        #: at level L of max, ``shed_classes`` admission shrinks to the
+        #: bottom 1 - L/max of the queue; the top level rejects outright
+        self.shed_level = 0
+        self.max_shed_level = 4
+        self.shed_classes: Tuple[str, ...] = ("cold",)
         self.submitted = 0
         self.rejected = 0
         self.rejected_cold = 0
+        self.rejected_brownout = 0
         #: observability hooks (wired by the serving loop when obs is on):
         #: tracer opens a trace per admitted request, recorder captures
         #: admission rejects as flight-recorder events
@@ -130,16 +149,41 @@ class RequestQueue:
         ratio = self._weight_ewma / max(weight, 1e-9)
         return min(max(ratio, 1.0 / self.HINT_SCALE_MAX), self.HINT_SCALE_MAX)
 
+    def set_shed_level(self, level: int) -> None:
+        """Set the brownout shed level (clamped into [0, max_shed_level]).
+        Called by the brownout controller, never by the queue itself."""
+        with self._lock:
+            self.shed_level = max(0, min(int(level), self.max_shed_level))
+
     # -- admission -----------------------------------------------------------
-    def submit(self, query: RPQ) -> Union[ServeTicket, Rejection]:
+    def submit(self, query: RPQ,
+               cls: str = "hot") -> Union[ServeTicket, Rejection]:
         """Admit one request or reject with a backlog-drain retry hint
         (weighted by the query's sketch frequency when the queue has an
-        ``admission_weight`` hook)."""
+        ``admission_weight`` hook; shed per-class under brownout)."""
         w = (self.admission_weight(query)
              if self.admission_weight is not None else None)
         with self._lock:
             depth = len(self._items)
             hint = max(depth, 1) * self._service_s * self._hint_scale(w)
+            lvl = self.shed_level
+            if lvl > 0 and cls in self.shed_classes:
+                # brownout: shed classes admit only into the bottom
+                # 1 - lvl/max of the queue; the top level sheds outright
+                frac = lvl / max(self.max_shed_level, 1)
+                if lvl >= self.max_shed_level or depth >= self.max_depth * (
+                        1.0 - frac):
+                    self.rejected += 1
+                    self.rejected_brownout += 1
+                    hint *= 1 + lvl
+                    if self.recorder is not None:
+                        self.recorder.record("admission_reject",
+                                             reason="brownout", cls=cls,
+                                             shed_level=lvl,
+                                             queue_depth=depth,
+                                             retry_after_s=hint)
+                    return Rejection(retry_after_s=hint, queue_depth=depth,
+                                     reason="brownout")
             if depth >= self.max_depth:
                 self.rejected += 1
                 if self.recorder is not None:
@@ -165,7 +209,8 @@ class RequestQueue:
             if w is not None:
                 a = self._ewma_alpha
                 self._weight_ewma = (1 - a) * self._weight_ewma + a * w
-            ticket = ServeTicket(query=query, submitted_s=time.perf_counter())
+            ticket = ServeTicket(query=query, cls=cls,
+                                 submitted_s=time.perf_counter())
             if self.tracer is not None:
                 ctx = self.tracer.new_trace()
                 if ctx.sampled:

@@ -227,6 +227,13 @@ class ShipChannel:
         self.blocked = 0
         #: highest group seq ever handed to send() (shipped, not acked)
         self.last_shipped_seq = 0
+        #: optional circuit breaker (``serve.control.Breaker``, wired by
+        #: the coordinator when control loops are on): an open link
+        #: fast-fails the send instead of feeding a blackhole — the frame
+        #: is still counted lost, and the follower's tail-resync path
+        #: repairs the gap once the breaker's half-open probe succeeds
+        self.breaker = None
+        self.breaker_fastfail = 0
 
     def set_partitioned(self, flag: bool = True) -> None:
         self.partitioned = bool(flag)
@@ -243,13 +250,24 @@ class ShipChannel:
         """Ship one frame; returns False when the transport lost it."""
         if frame.kind == KIND_GROUP:
             self.last_shipped_seq = max(self.last_shipped_seq, int(frame.seq))
+        if self.breaker is not None and not self.breaker.allow():
+            # open link: don't even attempt the transport — the loss is
+            # identical to a blackhole, but counted as a fast-fail and the
+            # half-open probe (the first allowed send) re-tests the link
+            self.breaker_fastfail += 1
+            self.blocked += 1
+            return False
         if self._blackholed():
             self.blocked += 1
+            if self.breaker is not None:
+                self.breaker.record_failure()
             return False
         try:
             _fire_site(self._faults, SITE_SHIP_DROP, self.name)
         except InjectedFault:
             self.dropped += 1
+            if self.breaker is not None:
+                self.breaker.record_failure()
             return False
         held = False
         try:
@@ -276,6 +294,8 @@ class ShipChannel:
                     # the swapped-out frame lands *after* this newer one
                     self._inbox.append(self._swap)
                     self._swap = None
+        if self.breaker is not None:
+            self.breaker.record_success()
         return True
 
     def flush_in_flight(self) -> int:
@@ -944,6 +964,7 @@ class FollowerReplica:
             "channel_delayed": self.channel.delayed,
             "channel_reordered": self.channel.reordered,
             "channel_blocked": self.channel.blocked,
+            "channel_breaker_fastfail": self.channel.breaker_fastfail,
         }
 
     def collect(self) -> Dict[str, Any]:

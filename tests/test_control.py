@@ -1,0 +1,516 @@
+"""Control loops (PR 10): breakers, windowed quantiles, brownout
+admission, adaptive hedging, pressure-aware invocation cadence."""
+import numpy as np
+import pytest
+
+from repro.core.online import OnlinePolicy, OnlineTaper
+from repro.core.rpq import parse_rpq
+from repro.core.taper import TaperConfig
+from repro.graphs.generators import musicbrainz_like
+from repro.graphs.graph import MutationBatch
+from repro.obs.registry import Registry
+from repro.serve.control import (
+    Breaker,
+    BrownoutController,
+    ControlConfig,
+    HedgeController,
+    WindowedQuantile,
+    serve_pressure,
+)
+from repro.serve.loop import ServeLoopConfig, ServingLoop
+from repro.serve.queueing import Rejection, RequestQueue
+from repro.serve.replication import Frame, ShipChannel
+
+MQ1 = parse_rpq("Area.Artist.(Artist|Label).Area")
+MQ3 = parse_rpq("Artist.Credit.Track.Medium")
+
+
+class FakeClock:
+    def __init__(self, t0=0.0):
+        self.t = float(t0)
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+class ListRecorder:
+    def __init__(self):
+        self.events = []
+
+    def record(self, kind, **fields):
+        self.events.append({"kind": kind, **fields})
+
+    def of(self, kind):
+        return [e for e in self.events if e["kind"] == kind]
+
+
+# ---------------------------------------------------------------------------
+# Breaker
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_trips_on_error_rate_not_just_streak():
+    # 2 failures in 3 calls: not consecutive, but rate 2/3 >= 0.5 trips —
+    # the upgrade over the old bare consecutive-strike count
+    b = Breaker("x", window=8, min_failures=2, error_rate=0.5)
+    assert b.record_failure() is False
+    b.record_success()
+    assert b.record_failure() is True  # the tripping edge
+    assert b.state == "open" and b.trips == 1
+    assert b.record_failure() is False  # already open: no second edge
+
+
+def test_breaker_consecutive_tail_trips_below_rate():
+    # 10 successes then 3 straight failures: rate 3/13 < 0.9 but the
+    # trailing strike count preserves the historic ladder behaviour
+    b = Breaker("x", window=16, min_failures=3, error_rate=0.9)
+    for _ in range(10):
+        b.record_success()
+    b.record_failure()
+    b.record_failure()
+    assert b.state == "closed"
+    assert b.record_failure() is True
+    assert b.state == "open"
+
+
+def test_breaker_no_trip_below_min_failures():
+    b = Breaker("x", window=8, min_failures=3, error_rate=0.1)
+    b.record_failure()
+    b.record_failure()
+    assert b.state == "closed"
+
+
+def test_breaker_cooldown_halfopen_probe_and_close():
+    clk = FakeClock()
+    rec = ListRecorder()
+    b = Breaker("dep", window=4, min_failures=2, error_rate=0.5,
+                cooldown_s=1.0, recorder=rec, clock=clk)
+    b.record_failure()
+    b.record_failure()
+    assert b.state == "open"
+    assert not b.allow() and not b.allow()
+    assert b.fast_failures == 2
+    clk.advance(1.01)
+    assert b.allow()  # cooldown elapsed: half-open probe flows
+    assert b.state == "half_open"
+    b.record_success()
+    assert b.state == "closed" and b.closes == 1
+    # window was cleared at close: one failure alone cannot re-trip
+    assert b.record_failure() is False
+    frames = [(e["frm"], e["to"]) for e in rec.of("breaker_transition")]
+    assert frames == [("closed", "open"), ("open", "half_open"),
+                      ("half_open", "closed")]
+
+
+def test_breaker_failed_probe_doubles_cooldown_up_to_max():
+    clk = FakeClock()
+    b = Breaker("dep", window=4, min_failures=1, error_rate=1.0,
+                cooldown_s=1.0, cooldown_max_s=3.0, clock=clk)
+    b.record_failure()
+    for expected in (2.0, 3.0, 3.0):  # doubled, then capped
+        clk.advance(b._cooldown_s + 0.01)
+        assert b.allow() and b.state == "half_open"
+        b.record_failure()  # failed probe
+        assert b.state == "open"
+        assert b._cooldown_s == expected
+    # a successful probe resets the cooldown ladder
+    clk.advance(b._cooldown_s + 0.01)
+    assert b.allow()
+    b.record_success()
+    assert b.state == "closed" and b._cooldown_s == 1.0
+
+
+def test_breaker_open_ignores_straggler_success():
+    b = Breaker("x", window=4, min_failures=1, error_rate=1.0,
+                cooldown_s=99.0, clock=FakeClock())
+    b.record_failure()
+    b.record_success()  # a call that was in flight at the trip
+    assert b.state == "open"
+
+
+def test_breaker_reset_reopens_fresh():
+    b = Breaker("x", window=4, min_failures=1, error_rate=1.0)
+    b.record_failure()
+    assert b.state == "open"
+    b.reset()
+    assert b.state == "closed"
+    assert b.allow()
+
+
+# ---------------------------------------------------------------------------
+# WindowedQuantile
+# ---------------------------------------------------------------------------
+
+
+def test_windowed_quantile_sees_only_the_window():
+    reg = Registry()
+    h = reg.histogram("lat", cls="hot")
+    for _ in range(100):
+        h.observe(0.001)  # old history: fast
+    w = WindowedQuantile(h)
+    w.advance()  # window starts after the fast history
+    for _ in range(10):
+        h.observe(0.9)  # the live window is slow
+    assert w.count == 10
+    # lifetime quantile still reads fast; the window reads slow
+    assert h.quantile(0.5) < 0.01
+    assert w.quantile(0.5) > 0.1
+
+
+def test_windowed_quantile_empty_window_is_none():
+    reg = Registry()
+    h = reg.histogram("lat", cls="hot")
+    h.observe(0.5)
+    w = WindowedQuantile(h)
+    w.advance()
+    assert w.count == 0
+    assert w.quantile(0.99) is None
+
+
+def test_windowed_quantile_interpolates_within_bucket():
+    reg = Registry()
+    h = reg.histogram("lat", cls="hot")
+    w = WindowedQuantile(h)
+    for _ in range(8):
+        h.observe(0.3)
+    q = w.quantile(0.5)
+    lo = max(b for b in h.bounds if b < 0.3)
+    hi = min(b for b in h.bounds if b >= 0.3)
+    assert lo <= q <= hi
+
+
+# ---------------------------------------------------------------------------
+# serve_pressure
+# ---------------------------------------------------------------------------
+
+
+def test_serve_pressure_weights_and_clamp():
+    cfg = ControlConfig()
+    assert serve_pressure(0.0, 0.0, 0.0, cfg) == 0.0
+    assert serve_pressure(9.0, 9.0, 9.0, cfg) == 1.0  # inputs clamp too
+    p = serve_pressure(0.5, 0.0, 0.0, cfg)
+    assert p == pytest.approx(cfg.pressure_depth_weight * 0.5)
+    assert 0.0 <= serve_pressure(-1.0, 0.2, 0.1, cfg) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# RequestQueue brownout shedding
+# ---------------------------------------------------------------------------
+
+
+def test_queue_shed_level_rejects_cold_keeps_hot():
+    q = RequestQueue(max_depth=16)
+    q.max_shed_level = 4
+    q.shed_classes = ("cold",)
+    q.set_shed_level(4)  # max level: shed classes rejected outright
+    r = q.submit(MQ1, cls="cold")
+    assert isinstance(r, Rejection) and r.reason == "brownout"
+    assert q.rejected_brownout == 1
+    assert not isinstance(q.submit(MQ1, cls="hot"), Rejection)
+
+
+def test_queue_partial_shed_shrinks_admission_zone():
+    q = RequestQueue(max_depth=8)
+    q.max_shed_level = 4
+    q.shed_classes = ("cold",)
+    q.set_shed_level(2)  # admission zone shrinks to half depth
+    admitted = 0
+    for _ in range(8):
+        if not isinstance(q.submit(MQ1, cls="cold"), Rejection):
+            admitted += 1
+    assert 0 < admitted < 8
+    # retry hint scales with the shed level
+    q2 = RequestQueue(max_depth=8)
+    q2.set_shed_level(q2.max_shed_level)
+    rej = q2.submit(MQ1, cls="cold")
+    base = RequestQueue(max_depth=1)
+    base.submit(MQ1, cls="hot")
+    full = base.submit(MQ1, cls="hot")
+    assert rej.retry_after_s > full.retry_after_s
+
+
+def test_queue_set_shed_level_clamps():
+    q = RequestQueue(max_depth=8)
+    q.max_shed_level = 3
+    q.set_shed_level(99)
+    assert q.shed_level == 3
+    q.set_shed_level(-4)
+    assert q.shed_level == 0
+
+
+# ---------------------------------------------------------------------------
+# BrownoutController
+# ---------------------------------------------------------------------------
+
+
+def _brownout(clk, **over):
+    kw = dict(slo_budget_s={"hot": 0.05}, window_s=1.0,
+              min_window_samples=4, shed_levels=3, clear_ratio=0.5,
+              clear_windows=2, clock=clk)
+    kw.update(over)
+    cfg = ControlConfig(**kw)
+    reg = Registry()
+    q = RequestQueue(max_depth=32)
+    rec = ListRecorder()
+    return BrownoutController(q, reg, cfg, recorder=rec), reg, q, rec
+
+
+def _feed(reg, value, n=8, cls="hot"):
+    h = reg.histogram("request_latency_s", cls=cls)
+    for _ in range(n):
+        h.observe(value)
+
+
+def test_brownout_breach_raises_one_level_per_window():
+    clk = FakeClock()
+    bo, reg, q, rec = _brownout(clk)
+    _feed(reg, 0.4)  # p99 far over the 50ms budget
+    assert bo.tick() == 1
+    assert q.shed_level == 1 and bo.shed_raises == 1
+    _feed(reg, 0.4)
+    assert bo.tick() == 2
+    _feed(reg, 0.4)
+    assert bo.tick() == 3
+    _feed(reg, 0.4)
+    assert bo.tick() is None  # ladder tops out at shed_levels
+    assert q.shed_level == 3
+    evs = rec.of("shed_level")
+    assert [e["level"] for e in evs] == [1, 2, 3]
+    assert all(e["raised"] for e in evs)
+    assert evs[0]["cls"] == "hot" and evs[0]["budget_s"] == 0.05
+
+
+def test_brownout_recovery_is_hysteretic():
+    clk = FakeClock()
+    bo, reg, q, rec = _brownout(clk)
+    _feed(reg, 0.4)
+    bo.tick()
+    assert q.shed_level == 1
+    # one clear window is not enough (clear_windows=2)
+    _feed(reg, 0.001)
+    assert bo.tick() is None and q.shed_level == 1
+    _feed(reg, 0.001)
+    assert bo.tick() == 0
+    assert q.shed_level == 0 and bo.shed_drops == 1
+
+
+def test_brownout_idle_window_is_not_recovery():
+    clk = FakeClock()
+    bo, reg, q, rec = _brownout(clk)
+    _feed(reg, 0.4)
+    bo.tick()
+    assert q.shed_level == 1
+    # windows with no samples must not walk the level back down
+    for _ in range(5):
+        assert bo.tick() is None
+    assert q.shed_level == 1
+
+
+def test_brownout_near_budget_resets_clear_streak():
+    clk = FakeClock()
+    bo, reg, q, rec = _brownout(clk)
+    _feed(reg, 0.4)
+    bo.tick()
+    _feed(reg, 0.001)
+    bo.tick()  # streak 1/2
+    _feed(reg, 0.04)  # below budget but above clear_ratio * budget
+    assert bo.tick() is None
+    _feed(reg, 0.001)
+    assert bo.tick() is None  # streak restarted: 1/2 again
+    assert q.shed_level == 1
+
+
+def test_brownout_maybe_tick_respects_window_cadence():
+    clk = FakeClock()
+    bo, reg, q, rec = _brownout(clk)
+    _feed(reg, 0.4)
+    assert bo.maybe_tick() is None  # window not yet elapsed
+    assert bo.ticks == 0
+    clk.advance(1.01)
+    assert bo.maybe_tick() == 1
+    assert bo.ticks == 1
+
+
+def test_brownout_set_budget_live():
+    clk = FakeClock()
+    bo, reg, q, rec = _brownout(clk)
+    _feed(reg, 0.01)  # fine under the default 50ms budget
+    assert bo.tick() is None
+    bo.set_budget("hot", 1e-6)
+    _feed(reg, 0.01)  # same traffic now breaches
+    assert bo.tick() == 1
+
+
+# ---------------------------------------------------------------------------
+# HedgeController
+# ---------------------------------------------------------------------------
+
+
+def test_hedge_deadline_defaults_to_budget_without_estimate():
+    clk = FakeClock()
+    cfg = ControlConfig(window_s=1.0, min_window_samples=4, clock=clk)
+    hc = HedgeController(Registry(), cfg)
+    assert hc.deadline("hot", 0.05) == 0.05
+    assert hc.deadline("hot", None) is None
+
+
+def test_hedge_deadline_tracks_quantile_clamped_to_budget():
+    clk = FakeClock()
+    cfg = ControlConfig(window_s=1.0, min_window_samples=4,
+                        hedge_factor=1.5, hedge_floor_s=1e-3, clock=clk)
+    reg = Registry()
+    hc = HedgeController(reg, cfg)
+    hc.deadline("hot", 0.5)  # registers the class
+    h = reg.histogram("router_latency_s", cls="hot")
+    for _ in range(8):
+        h.observe(0.01)
+    clk.advance(1.01)
+    d = hc.deadline("hot", 0.5)
+    assert d < 0.5  # adaptive: hedges far earlier than the static budget
+    assert d >= cfg.hedge_floor_s
+    # the static budget is the worst case: a slow window clamps to it
+    for _ in range(8):
+        h.observe(30.0)
+    clk.advance(1.01)
+    assert hc.deadline("hot", 0.5) == 0.5
+
+
+def test_hedge_floor_clamp():
+    clk = FakeClock()
+    cfg = ControlConfig(window_s=1.0, min_window_samples=2,
+                        hedge_floor_s=0.25, clock=clk)
+    reg = Registry()
+    hc = HedgeController(reg, cfg)
+    hc.deadline("hot", 0.5)
+    h = reg.histogram("router_latency_s", cls="hot")
+    for _ in range(4):
+        h.observe(1e-5)
+    clk.advance(1.01)
+    assert hc.deadline("hot", 0.5) == 0.25
+
+
+# ---------------------------------------------------------------------------
+# pressure-aware invocation cadence
+# ---------------------------------------------------------------------------
+
+
+def _dirty_taper(policy):
+    g = musicbrainz_like(200, seed=3)
+    ot = OnlineTaper(g, 4, policy=policy,
+                     config=TaperConfig(max_iterations=2))
+    # enough dirt to arm the topology trigger
+    for i in range(40):
+        ot.apply_mutations(MutationBatch(add_edges=[(i % 50, (i * 3) % 50)]))
+    return ot
+
+
+def test_policy_defers_invocation_under_pressure():
+    pol = OnlinePolicy(bootstrap_after_ticks=None, cadence=10**9,
+                       min_interval=0, dirty_fraction=0.01,
+                       drift_l1=9e9, ipt_regression=9e9,
+                       defer_above_pressure=0.5)
+    ot = _dirty_taper(pol)
+    assert ot.poll(pressure=0.9) is None  # trigger armed but deferred
+    assert ot.pressure_deferrals == 1
+    assert ot.poll(pressure=0.1) is not None  # fires once pressure drops
+    assert ot.pressure_deferrals == 1
+
+
+def test_policy_accelerates_at_idle():
+    # regression 1.12x: below the 1.2 threshold, but the idle-relaxed
+    # threshold 1 + (1.2 - 1) * 0.5 = 1.1 catches it
+    base = OnlinePolicy(bootstrap_after_ticks=None, cadence=10**9,
+                        min_interval=0, dirty_fraction=2.0,
+                        drift_l1=9e9, ipt_regression=1.2,
+                        accelerate_below_pressure=0.2, accel_factor=0.5)
+    g = musicbrainz_like(200, seed=3)
+    ot = OnlineTaper(g, 4, policy=base,
+                     config=TaperConfig(max_iterations=2))
+    ot.poll()  # no baseline yet; establish one
+    ot.invoke("seed")
+    ot._ipt_at_invoke = 1.0
+    assert ot.poll(measured_ipt=1.12, pressure=0.5) is None
+    assert ot.poll(measured_ipt=1.12, pressure=0.1) is not None
+
+
+# ---------------------------------------------------------------------------
+# ship-channel breaker
+# ---------------------------------------------------------------------------
+
+
+def test_ship_channel_breaker_fast_fails_open_link():
+    clk = FakeClock()
+    ch = ShipChannel("replica-1")
+    ch.breaker = Breaker("ship-replica-1", window=4, min_failures=1,
+                         error_rate=1.0, cooldown_s=5.0, clock=clk)
+    ch.breaker.record_failure()  # link declared dead
+    assert not ch.send(Frame(kind="commit", epoch=1, seq=1))
+    assert ch.breaker_fastfail == 1 and ch.blocked == 1
+    # half-open probe after cooldown actually attempts the transport
+    clk.advance(5.01)
+    assert ch.send(Frame(kind="commit", epoch=1, seq=2))
+    assert ch.breaker.state == "closed"
+
+
+# ---------------------------------------------------------------------------
+# ServingLoop integration: brownout + pressure surface in stats()
+# ---------------------------------------------------------------------------
+
+
+def test_serving_loop_brownout_end_to_end(tmp_path):
+    clk = FakeClock()
+    ctl = ControlConfig(slo_budget_s={"hot": 1e-6}, window_s=0.5,
+                        min_window_samples=2, shed_levels=2,
+                        clear_windows=1, clock=clk)
+    pol = OnlinePolicy(bootstrap_after_ticks=0, cadence=10**9,
+                       min_interval=0, dirty_fraction=2.0,
+                       drift_l1=9e9, ipt_regression=9e9)
+    loop = ServingLoop(
+        musicbrainz_like(300, seed=7), 4,
+        taper_config=TaperConfig(max_iterations=2), policy=pol,
+        config=ServeLoopConfig(micro_batch=8, overlap_invocations=False,
+                               snapshot_dir=str(tmp_path), control=ctl))
+    try:
+        for _ in range(4):
+            loop.submit(MQ1, cls="hot")
+            loop.submit(MQ3, cls="cold")
+        loop.pump()
+        clk.advance(0.51)
+        loop.submit(MQ1, cls="hot")
+        loop.pump()  # controller window: the 1µs budget is breached
+        st = loop.stats()
+        assert st["shed_level"] == 1
+        assert 0.0 <= st["serve_pressure"] <= 1.0
+        assert st["backend_breaker_state"] == "closed"
+        # a second breached window tops the ladder out: cold traffic is
+        # rejected outright, not just depth-limited
+        for _ in range(4):
+            loop.submit(MQ1, cls="hot")
+        loop.pump()
+        clk.advance(0.51)
+        loop.submit(MQ1, cls="hot")
+        loop.pump()
+        assert loop.stats()["shed_level"] == 2
+        rej = 0
+        for _ in range(12):
+            if isinstance(loop.submit(MQ3, cls="cold"), Rejection):
+                rej += 1
+        assert rej > 0
+        assert loop.stats()["rejected_brownout"] == rej
+        # recovery: budget restored, traffic clears, admission re-opens
+        loop._brownout.set_budget("hot", 1e9)
+        for _ in range(4):  # one clear window per level step-down
+            for _ in range(4):
+                loop.submit(MQ1, cls="hot")
+            loop.pump()
+            clk.advance(0.51)
+            loop.submit(MQ1, cls="hot")
+            loop.pump()
+            if loop.stats()["shed_level"] == 0:
+                break
+        assert loop.stats()["shed_level"] == 0
+    finally:
+        loop.stop()

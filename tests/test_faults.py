@@ -72,6 +72,19 @@ def test_fault_injector_arm_fire_exhaust_disarm():
         FaultSpec(mode="explode")
 
 
+def test_fault_injector_rejects_unknown_site():
+    """A typo'd site must fail at arm time, not pass vacuously by never
+    firing (PR 10 satellite)."""
+    fi = FaultInjector()
+    with pytest.raises(ValueError, match="unknown fault site 'invocatoin'"):
+        fi.arm("invocatoin")
+    with pytest.raises(ValueError, match="valid sites: "):
+        fi.arm("not_a_site:replica-1")
+    # qualified arms of known sites still work
+    fi.arm("replica_serve:replica-1")
+    assert fi.armed("replica_serve:replica-1")
+
+
 def test_fault_injector_stall_mode_sleeps_not_raises():
     fi = FaultInjector()
     fi.arm("invocation", mode="stall", delay_s=0.05)

@@ -437,3 +437,52 @@ def test_obs_disabled_leaves_no_trace_state(tmp_path):
     assert loop.obs.tracer.spans() == []
     assert loop.obs.recorder.events() == []
     loop.stop()
+
+
+# ---------------------------------------------------------------------------
+# PR 10 satellites: quantile round-trip + recorder wraparound under soak
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_quantile_round_trips_sliding_window():
+    """The registry histogram's bucket quantile and the serving metrics'
+    exact SlidingWindow percentile agree to bucket resolution on the same
+    samples — the brownout controller may trust either signal."""
+    import bisect
+
+    rng = np.random.default_rng(42)
+    reg = Registry()
+    h = reg.histogram("lat", cls="hot")
+    sw = SlidingWindow(window=4096)
+    for x in rng.uniform(0.0008, 1.2, size=600):
+        h.observe(float(x))
+        sw.record(float(x))
+    for q in (0.5, 0.9, 0.95, 0.99):
+        exact = sw.percentile(q * 100.0)
+        est = h.quantile(q)
+        # the estimate must land in the exact value's bucket (one bucket
+        # of slack either side for the rank-rounding difference)
+        i = bisect.bisect_left(h.bounds, exact)
+        lo = h.bounds[i - 2] if i >= 2 else 0.0
+        hi = h.bounds[min(i + 1, len(h.bounds) - 1)]
+        assert lo <= est <= hi, (q, exact, est)
+
+
+def test_recorder_wraparound_retains_exactly_the_window(tmp_path):
+    """Soak past capacity: the ring evicts oldest-first, seq stays
+    monotone, and a trigger dumps exactly the surviving window."""
+    rec = FlightRecorder(capacity=8, dump_dir=tmp_path, node="soak")
+    for i in range(50):
+        rec.record("tick", i=i)
+    assert rec.recorded == 50
+    evs = rec.events()
+    assert len(evs) == 8
+    assert [e["i"] for e in evs] == list(range(42, 50))  # newest 8 survive
+    assert [e["seq"] for e in evs] == sorted(e["seq"] for e in evs)
+    path = rec.trigger("soak-check")
+    rows = FlightRecorder.load_jsonl(path)
+    # the dump_trigger event itself evicted the oldest retained tick
+    assert len(rows) == 8
+    assert [r["i"] for r in rows[:-1]] == list(range(43, 50))
+    assert rows[-1]["kind"] == "dump_trigger"
+    assert rows[-1]["reason"] == "soak-check"
